@@ -1,0 +1,55 @@
+"""Fig. 10: ASP-KAN-HAQ vs conventional (PACT-based) quantization —
+normalized area and energy of the B(X) path, G in {8,16,32,64}.
+
+Paper claims: avg area reduction 40.14x, avg energy reduction 5.59x,
+improvements growing with G.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.asp_quant import ASPQuantSpec
+from repro.core.costmodel import bx_path_asp, bx_path_conventional
+
+PAPER_AVG_AREA = 40.14
+PAPER_AVG_ENERGY = 5.59
+
+GRIDS = (8, 16, 32, 64)
+
+
+def run(print_fn=print) -> dict:
+    rows = []
+    for g in GRIDS:
+        spec = ASPQuantSpec(grid_size=g, order=3, n_bits=8, lut_bits=8,
+                            lo=0.0, hi=1.0)
+        conv = bx_path_conventional(spec)
+        asp = bx_path_asp(spec)
+        rows.append({
+            "G": g,
+            "LD": spec.ld,
+            "conv_area_um2": conv["area_um2"],
+            "asp_area_um2": asp["area_um2"],
+            "area_ratio": conv["area_um2"] / asp["area_um2"],
+            "conv_energy_pj": conv["energy_pj"],
+            "asp_energy_pj": asp["energy_pj"],
+            "energy_ratio": conv["energy_pj"] / asp["energy_pj"],
+        })
+    avg_area = float(np.mean([r["area_ratio"] for r in rows]))
+    avg_energy = float(np.mean([r["energy_ratio"] for r in rows]))
+
+    print_fn("fig10: B(X) path, conventional(PACT) vs ASP-KAN-HAQ (22nm model)")
+    print_fn("G,LD,conv_area,asp_area,area_ratio,conv_energy,asp_energy,energy_ratio")
+    for r in rows:
+        print_fn(
+            f"{r['G']},{r['LD']},{r['conv_area_um2']:.0f},{r['asp_area_um2']:.0f},"
+            f"{r['area_ratio']:.1f},{r['conv_energy_pj']:.2f},"
+            f"{r['asp_energy_pj']:.2f},{r['energy_ratio']:.2f}"
+        )
+    print_fn(f"avg_area_ratio,{avg_area:.2f},paper,{PAPER_AVG_AREA}")
+    print_fn(f"avg_energy_ratio,{avg_energy:.2f},paper,{PAPER_AVG_ENERGY}")
+    return {"rows": rows, "avg_area_ratio": avg_area, "avg_energy_ratio": avg_energy}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Fig. 11: WL input-generator comparison at 6 bits (2^6 pulse benchmark).
+
+Paper claims (vs TM-DV-IG, N=3): pure voltage 1.96x area, 11.9x power,
+best latency; pure PWM 8x latency, 1.07x area; TM-DV FOM 3x / 4.1x better.
+FOM = 1 / (area * power * latency).
+
+Also reports the accuracy side (charge-transfer error of each method under
+the behavioral noise model) — the reason TM-DV wins the FOM without losing
+MAC yield.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import input_generator_cost
+from repro.core.tmdv import PURE_PWM, PURE_VOLTAGE, TMDVConfig, apply_input_noise
+
+PAPER = {
+    "voltage_area_x": 1.96, "voltage_power_x": 11.9,
+    "pwm_latency_x": 8.0, "pwm_area_x": 1.07,
+    "fom_vs_voltage": 3.0, "fom_vs_pwm": 4.1,
+}
+
+BITS = 6
+
+
+def _charge_rmse(cfg: TMDVConfig, key) -> float:
+    codes = jnp.arange(2**cfg.total_bits).repeat(256)
+    q = apply_input_noise(codes, cfg, key)
+    return float(jnp.sqrt(jnp.mean((q - codes.astype(jnp.float32)) ** 2)))
+
+
+def run(print_fn=print) -> dict:
+    key = jax.random.PRNGKey(0)
+    gens = {
+        "pure_voltage": PURE_VOLTAGE(BITS),
+        "pure_pwm": PURE_PWM(BITS),
+        "tmdv": TMDVConfig(total_bits=BITS, voltage_bits=BITS // 2),
+    }
+    rows = {}
+    for name, cfg in gens.items():
+        c = input_generator_cost(cfg)
+        c["charge_rmse_lsb"] = _charge_rmse(cfg, key)
+        rows[name] = c
+
+    t = rows["tmdv"]
+    derived = {
+        "voltage_area_x": rows["pure_voltage"]["area_um2"] / t["area_um2"],
+        "voltage_power_x": rows["pure_voltage"]["power_uw"] / t["power_uw"],
+        "pwm_latency_x": rows["pure_pwm"]["latency_ns"] / t["latency_ns"],
+        "pwm_area_x": rows["pure_pwm"]["area_um2"] / t["area_um2"],
+        "fom_vs_voltage": t["fom"] / rows["pure_voltage"]["fom"],
+        "fom_vs_pwm": t["fom"] / rows["pure_pwm"]["fom"],
+    }
+
+    print_fn("fig11: WL input generators at 6 bits (22nm model)")
+    print_fn("method,area_um2,power_uw,latency_ns,fom,charge_rmse_lsb")
+    for name, c in rows.items():
+        print_fn(
+            f"{name},{c['area_um2']:.1f},{c['power_uw']:.3f},"
+            f"{c['latency_ns']:.0f},{c['fom']:.2e},{c['charge_rmse_lsb']:.3f}"
+        )
+    print_fn("metric,ours,paper")
+    for k, v in derived.items():
+        print_fn(f"{k},{v:.2f},{PAPER[k]}")
+    return {"rows": rows, "derived": derived}
+
+
+if __name__ == "__main__":
+    run()

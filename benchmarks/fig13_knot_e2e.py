@@ -1,0 +1,141 @@
+"""Fig. 13: end-to-end knot-theory comparison — traditional MLP accelerator
+vs KAN1 (minimal HW constraints) vs KAN2 (moderate HW constraints).
+
+Full KAN-NeuroSim pipeline: hardware design point per paper (KAN1: G=5,
+8-bit, TD-P, 128-row arrays; KAN2: G=68, 10-bit, 1024-row arrays), cost from
+the 22nm model, accuracy from training on the knot surrogate with the
+quantized+ACIM evaluation path (KAN-SAM enabled).
+
+Paper table:
+            MLP        KAN1     KAN2
+  Area      0.585 mm2  0.014    0.063
+  Energy    20049 pJ   257.13   392.76
+  Latency   19632 ns   664      832
+  #Param    190214     279      2232
+  Accuracy  78%        81.03%   86.74%
+Headline: 41.78x area, 77.97x energy, 23.59-29.56x latency, +3.03% accuracy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asp_quant import ASPQuantSpec
+from repro.core.cim import CIMConfig
+from repro.core.costmodel import accelerator_cost, kan_accelerator, mlp_accelerator
+from repro.core.kan_layer import KANSpec, param_count
+from repro.core.mlp_baseline import (
+    PAPER_MLP_DIMS,
+    init_mlp,
+    mlp_param_count,
+    train_mlp,
+)
+from repro.core.neurosim import evaluate_accuracy, evaluate_accuracy_cim, train_kan
+from repro.core.tmdv import PURE_PWM, TMDVConfig
+from repro.data.knot import make_knot_dataset
+
+PAPER = {
+    "MLP": {"area": 0.585, "energy": 20049.28, "latency": 19632,
+            "params": 190214, "acc": 0.78},
+    "KAN1": {"area": 0.014, "energy": 257.13, "latency": 664,
+             "params": 279, "acc": 0.8103},
+    "KAN2": {"area": 0.063, "energy": 392.76, "latency": 832,
+             "params": 2232, "acc": 0.8674},
+}
+
+KAN_DIMS = (17, 1, 14)
+
+
+def design_points():
+    k1 = ASPQuantSpec(grid_size=5, order=3, n_bits=8, lut_bits=8, lo=-1.0, hi=1.0)
+    k2 = ASPQuantSpec(grid_size=68, order=3, n_bits=10, lut_bits=10, lo=-1.0, hi=1.0)
+    return {
+        "MLP": accelerator_cost(mlp_accelerator(PAPER_MLP_DIMS, PURE_PWM(8))),
+        "KAN1": accelerator_cost(
+            kan_accelerator(KAN_DIMS, k1, TMDVConfig(8, 4), 128, adc_bits=8)),
+        "KAN2": accelerator_cost(
+            kan_accelerator(KAN_DIMS, k2, TMDVConfig(10, 6), 1024, adc_bits=10)),
+    }
+
+
+def run(print_fn=print, fast: bool = False, seed: int = 0) -> dict:
+    n_train = 8192 if fast else 65536
+    xt, yt, xv, yv = make_knot_dataset(n_train, 4096, seed=seed, label_noise=0.04)
+
+    # --- accuracy: MLP
+    mlp_epochs = 20 if fast else 60
+    _, mlp_hist = train_mlp(init_mlp(jax.random.PRNGKey(seed + 1)), xt, yt,
+                            xv, yv, epochs=mlp_epochs, lr=2e-3,
+                            batch_size=8192)
+    acc_mlp = max(mlp_hist)
+
+    # --- accuracy: KANs (trained, then evaluated on the ACIM sim with SAM)
+    def sched(total):
+        def f(step):
+            t = jnp.minimum(step / total, 1.0)
+            return 2e-2 * 0.95 * (0.5 * (1 + jnp.cos(jnp.pi * t))) + 1e-3
+        return f
+
+    accs = {}
+    for name, g, epochs in [("KAN1", 5, 40 if fast else 180),
+                            ("KAN2", 68, 20 if fast else 100)]:
+        kspec = KANSpec(dims=KAN_DIMS, grid_size=g)
+        steps = epochs * max(1, n_train // 4096)
+        params, _ = train_kan(kspec, xt, yt, xv, yv, epochs=epochs,
+                              batch_size=4096, lr=sched(steps), seed=seed)
+        sw = evaluate_accuracy(params, xv, yv, kspec)
+        cim_cfg = CIMConfig(array_rows=128 if name == "KAN1" else 1024,
+                            adc_bits=8 if name == "KAN1" else 10,
+                            ir_gamma=0.10, sigma_ps_ref=0.35)
+        hw = evaluate_accuracy_cim(params, xv, yv, kspec, cim_cfg,
+                                   jax.random.PRNGKey(7), use_sam=True,
+                                   calib_x=xt[:2048])
+        accs[name] = {"sw": sw, "hw": hw}
+
+    costs = design_points()
+    rows = {
+        "MLP": {**costs["MLP"], "params": mlp_param_count(), "acc": acc_mlp},
+        "KAN1": {**costs["KAN1"],
+                 "params": param_count(KANSpec(dims=KAN_DIMS, grid_size=5)),
+                 "acc": accs["KAN1"]["hw"], "acc_sw": accs["KAN1"]["sw"]},
+        "KAN2": {**costs["KAN2"],
+                 "params": param_count(KANSpec(dims=KAN_DIMS, grid_size=68)),
+                 "acc": accs["KAN2"]["hw"], "acc_sw": accs["KAN2"]["sw"]},
+    }
+
+    print_fn("fig13: knot-theory accelerators (ours vs paper)")
+    print_fn("metric,MLP,KAN1,KAN2,paper_MLP,paper_KAN1,paper_KAN2")
+    for metric, key, fmt in [("area_mm2", "area", "{:.4f}"),
+                             ("energy_pj", "energy", "{:.1f}"),
+                             ("latency_ns", "latency", "{:.0f}"),
+                             ("params", "params", "{:d}"),
+                             ("accuracy", "acc", "{:.3f}")]:
+        ours = [rows[m]["area_mm2" if metric == "area_mm2" else
+                        "energy_pj" if metric == "energy_pj" else
+                        "latency_ns" if metric == "latency_ns" else
+                        "params" if metric == "params" else "acc"]
+                for m in ("MLP", "KAN1", "KAN2")]
+        ref = [PAPER[m][key] for m in ("MLP", "KAN1", "KAN2")]
+        print_fn(metric + "," + ",".join(fmt.format(o) if metric == "params"
+                                         else f"{o:.4g}" for o in ours)
+                 + "," + ",".join(f"{r}" for r in ref))
+    h = {
+        "area_x": rows["MLP"]["area_mm2"] / rows["KAN1"]["area_mm2"],
+        "energy_x": rows["MLP"]["energy_pj"] / rows["KAN1"]["energy_pj"],
+        "latency_x": rows["MLP"]["latency_ns"] / rows["KAN1"]["latency_ns"],
+        "acc_delta_pp": 100 * (rows["KAN1"]["acc"] - rows["MLP"]["acc"]),
+    }
+    print_fn(
+        f"headline,area x{h['area_x']:.1f} (41.78) energy x{h['energy_x']:.1f} "
+        f"(77.97) latency x{h['latency_x']:.1f} (29.56) "
+        f"acc {h['acc_delta_pp']:+.2f}pp (+3.03)"
+    )
+    return {"rows": rows, "headline": h}
+
+
+if __name__ == "__main__":
+    import sys
+    run(fast="--fast" in sys.argv)

@@ -1,0 +1,128 @@
+"""§Roofline: aggregate dry-run reports into the per-cell roofline table.
+
+Reads reports/dryrun/*.json (written by repro.launch.dryrun), adds
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) and the useful-compute ratio,
+and emits the EXPERIMENTS.md §Roofline table.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS, SHAPES, get_config
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def param_counts(cfg: ModelConfig) -> tuple:
+    """(total params N, activated params N_active) — analytic."""
+    d, v = cfg.d_model, cfg.vocab_size
+    n_embed = v * d * (1 if cfg.tie_embeddings else 2)
+    per_layer_attn = 0
+    if cfg.num_heads:
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        per_layer_attn = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+
+    def ffn_params():
+        if cfg.ffn_kind == "swiglu":
+            return 3 * d * cfg.d_ff
+        if cfg.ffn_kind == "gelu":
+            return 2 * d * cfg.d_ff
+        if cfg.ffn_kind == "kan":
+            nb = cfg.kan_grid + cfg.kan_order
+            h = cfg.kan_d_hidden or max(1, cfg.d_ff // nb)
+            return d * (nb + 1) * h + h * (nb + 1) * d
+        return 0
+
+    total = n_embed
+    active = n_embed
+    for kind in cfg.layer_kinds:
+        if kind in ("global", "local", "bidir"):
+            total += per_layer_attn
+            active += per_layer_attn
+            if cfg.num_experts:
+                e_params = cfg.num_experts * 3 * d * cfg.d_ff
+                total += e_params + d * cfg.num_experts
+                active += cfg.num_experts_per_tok * 3 * d * cfg.d_ff
+            else:
+                total += ffn_params()
+                active += ffn_params()
+        elif kind == "rglru":
+            w = cfg.rnn_width or d
+            r = 2 * d * w + 2 * w * w + w * d
+            total += r + ffn_params()
+            active += r + ffn_params()
+        elif kind == "ssm":
+            din = cfg.ssm_expand * d
+            nh = din // cfg.ssm_head_dim
+            r = d * (2 * din + 2 * cfg.ssm_state + nh) + din * d
+            total += r
+            active += r
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (per_layer_attn + ffn_params())
+        active += cfg.encoder_layers * (per_layer_attn + ffn_params())
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """6·N_active·D for train; 2·N_active·D for inference-style cells."""
+    sh = SHAPES[shape_name]
+    _, active = param_counts(cfg)
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * active * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * active * tokens
+    return 2.0 * active * sh["global_batch"]  # decode: one token per seq
+
+
+def load_reports(directory: str = "reports/dryrun") -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(reports: list, print_fn=print):
+    print_fn(
+        "arch,shape,mesh,flops/dev,peak_GiB/dev,coll_MiB/dev,"
+        "compute_s,memory_s,collective_s,dominant,roofline_frac,"
+        "model_flops,useful_ratio"
+    )
+    rows = []
+    for r in reports:
+        cfg = get_config(r["arch"])
+        mf = model_flops(cfg, r["shape"])
+        devs = r["devices"]
+        total_hlo = r["flops_per_dev"] * devs
+        useful = mf / total_hlo if total_hlo else 0.0
+        rl = r["roofline"]
+        mesh_tag = "x".join(str(m) for m in r["mesh"])
+        row = dict(r, model_flops=mf, useful_ratio=useful)
+        rows.append(row)
+        print_fn(
+            f"{r['arch']},{r['shape']},{mesh_tag},{r['flops_per_dev']:.3e},"
+            f"{r['memory'].get('peak_bytes', 0)/2**30:.2f},"
+            f"{r['collectives']['total']/2**20:.1f},"
+            f"{rl['compute_s']:.4f},{rl['memory_s']:.4f},{rl['collective_s']:.4f},"
+            f"{rl['dominant']},{rl['roofline_fraction']:.3f},"
+            f"{mf:.3e},{useful:.3f}"
+        )
+    return rows
+
+
+def run(print_fn=print, directory: str = "reports/dryrun"):
+    reports = load_reports(directory)
+    if not reports:
+        print_fn("roofline: no dry-run reports found (run repro.launch.dryrun --all)")
+        return {"rows": []}
+    rows = table(reports, print_fn)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

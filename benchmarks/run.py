@@ -1,0 +1,81 @@
+"""Benchmark harness: one entry per paper table/figure + kernel microbench +
+roofline aggregation.  ``python -m benchmarks.run [--fast]``.
+
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _bench_kernel(print_fn=print):
+    """Microbenchmark the two Pallas kernels (interpret mode on CPU: the
+    numbers validate plumbing, not TPU perf — TPU perf comes from §Roofline)."""
+    from repro.core.asp_quant import ASPQuantSpec, build_lut
+    from repro.kernels.kan_spline.ops import kan_spline
+    from repro.kernels.kan_spline.ref import kan_spline_ref
+
+    spec = ASPQuantSpec(grid_size=8, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    e = build_lut(spec)
+    lut = jnp.asarray(e["lut_q"] * e["scale"], jnp.float32)
+    key = jax.random.PRNGKey(0)
+    codes = jax.random.randint(key, (256, 128), 0, spec.num_codes)
+    wc = jax.random.normal(key, (128, spec.num_basis, 128)) * 0.3
+    wb = jax.random.normal(key, (128, 128)) * 0.3
+
+    ref = jax.jit(lambda c: kan_spline_ref(c, lut, wc, wb, spec))
+    ref(codes).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        ref(codes).block_until_ready()
+    t_ref = (time.perf_counter() - t0) / 10 * 1e6
+    print_fn(f"kan_spline_ref_jit,{t_ref:.0f},us_per_call (B=256 F=128 O=128)")
+
+    out = kan_spline(codes, lut, wc, wb, spec, interpret=True)
+    err = float(jnp.abs(out - ref(codes)).max())
+    print_fn(f"kan_spline_pallas_interpret,allclose_err,{err:.2e}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced training budgets (CI-speed)")
+    ap.add_argument("--skip", default="",
+                    help="comma-list: fig10,fig11,fig12,fig13,kernels,roofline")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from benchmarks.fig10_asp_vs_pact import run as fig10
+    from benchmarks.fig11_input_generators import run as fig11
+    from benchmarks.fig12_kan_sam import run as fig12
+    from benchmarks.fig13_knot_e2e import run as fig13
+    from benchmarks.roofline import run as roofline
+
+    t0 = time.time()
+    if "fig10" not in skip:
+        fig10()
+        print()
+    if "fig11" not in skip:
+        fig11()
+        print()
+    if "kernels" not in skip:
+        _bench_kernel()
+        print()
+    if "fig12" not in skip:
+        fig12(fast=args.fast)
+        print()
+    if "fig13" not in skip:
+        fig13(fast=args.fast)
+        print()
+    if "roofline" not in skip:
+        roofline()
+    print(f"\ntotal_bench_time_s,{time.time()-t0:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end knot-theory pipeline (the paper's fig. 13 application):
+
+train KAN on the knot surrogate -> ASP-quantize -> evaluate on the
+RRAM-ACIM simulator with KAN-SAM mapping -> report accuracy + hardware cost.
+
+    PYTHONPATH=src python examples/knot_e2e.py [--fast]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asp_quant import ASPQuantSpec
+from repro.core.cim import CIMConfig
+from repro.core.costmodel import accelerator_cost, kan_accelerator
+from repro.core.kan_layer import KANSpec, param_count
+from repro.core.neurosim import (
+    evaluate_accuracy, evaluate_accuracy_cim, train_kan,
+)
+from repro.core.tmdv import TMDVConfig
+from repro.data.knot import make_knot_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--grid", type=int, default=5)
+    args = ap.parse_args()
+
+    n = 8192 if args.fast else 32768
+    epochs = 60 if args.fast else 250
+    xt, yt, xv, yv = make_knot_dataset(n, 2048, seed=0, label_noise=0.04)
+    kspec = KANSpec(dims=(17, 1, 14), grid_size=args.grid)
+    print(f"training KAN {kspec.dims} G={args.grid} "
+          f"({param_count(kspec)} params) on {n} samples ...")
+
+    steps = epochs * max(1, n // 2048)
+
+    def sched(step):
+        t = jnp.minimum(step / (0.9 * steps), 1.0)
+        return 1.5e-2 * 0.95 * (0.5 * (1 + jnp.cos(jnp.pi * t))) + 1e-3
+
+    params, hist = train_kan(kspec, xt, yt, xv, yv, epochs=epochs,
+                             batch_size=2048, lr=sched, verbose=True)
+    sw = evaluate_accuracy(params, xv, yv, kspec)
+    print(f"\nsoftware accuracy: {sw:.3f}")
+
+    cim = CIMConfig(array_rows=128, adc_bits=8, ir_gamma=0.06, sigma_ps_ref=0.05)
+    for sam in (False, True):
+        acc = evaluate_accuracy_cim(params, xv, yv, kspec, cim,
+                                    jax.random.PRNGKey(7), use_sam=sam,
+                                    calib_x=xt[:2048])
+        print(f"ACIM accuracy ({'KAN-SAM' if sam else 'baseline map'}): {acc:.3f}")
+
+    spec = ASPQuantSpec(grid_size=args.grid, order=3, n_bits=8, lut_bits=8,
+                        lo=-1.0, hi=1.0)
+    cost = accelerator_cost(
+        kan_accelerator((17, 1, 14), spec, TMDVConfig(8, 4), 128, adc_bits=8))
+    print(f"\n22nm accelerator: {cost['area_mm2']*1e3:.1f} x1e-3 mm^2, "
+          f"{cost['energy_pj']:.0f} pJ/inference, {cost['latency_ns']:.0f} ns")
+
+
+if __name__ == "__main__":
+    main()

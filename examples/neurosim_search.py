@@ -1,0 +1,54 @@
+"""KAN-NeuroSim hyperparameter search (paper §3.4, Fig. 9):
+
+step 1 — find the largest grid G whose accelerator fits the hardware budget;
+step 2 — grid-extension training under the budget with ACIM-aware eval.
+
+    PYTHONPATH=src python examples/neurosim_search.py [--fast]
+"""
+
+import argparse
+
+from repro.core.neurosim import (
+    HardwareConstraints, grid_extension_train, search_max_grid,
+)
+from repro.data.knot import make_knot_dataset
+from repro.core.neurosim import evaluate_accuracy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    dims = (17, 1, 14)
+    budgets = {
+        "minimal (KAN1-like)": HardwareConstraints(
+            max_area_mm2=0.016, max_energy_pj=280, max_latency_ns=700),
+        "moderate (KAN2-like)": HardwareConstraints(
+            max_area_mm2=0.065, max_energy_pj=420, max_latency_ns=900),
+    }
+    for name, hc in budgets.items():
+        g, cost = search_max_grid(dims, hc)
+        print(f"[{name}] step 1: max G = {g}  "
+              f"(area {cost['area_mm2']:.4f} mm^2, {cost['energy_pj']:.0f} pJ, "
+              f"{cost['latency_ns']:.0f} ns)" if g else f"[{name}] infeasible")
+
+    n = 8192 if args.fast else 16384
+    xt, yt, xv, yv = make_knot_dataset(n, 2048, seed=0, label_noise=0.04)
+    hc = budgets["minimal (KAN1-like)"]
+    print("\nstep 2: grid-extension training under the minimal budget")
+    out = grid_extension_train(
+        dims, hc, xt, yt, xv, yv,
+        g_init=3, extend_by=2,
+        epochs_per_round=20 if args.fast else 60,
+        max_rounds=3 if args.fast else 6,
+    )
+    print("extension log:", out["log"])
+    acc = evaluate_accuracy(out["params"], xv, yv, out["kspec"])
+    print(f"final: G={out['G']} accuracy={acc:.3f} "
+          f"cost: {out['cost']['area_mm2']:.4f} mm^2 "
+          f"{out['cost']['energy_pj']:.0f} pJ {out['cost']['latency_ns']:.0f} ns")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Render the §Roofline markdown table from reports/dryrun/*.json and patch
+EXPERIMENTS.md (replaces FINAL_TABLE_PLACEHOLDER or the previous table).
+
+    PYTHONPATH=src python scripts/roofline_md.py [reports/dryrun]
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import load_reports, model_flops  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+
+BEGIN = "<!-- ROOFLINE_TABLE_BEGIN -->"
+END = "<!-- ROOFLINE_TABLE_END -->"
+
+
+def render(directory="reports/dryrun"):
+    reports = load_reports(directory)
+    lines = [
+        BEGIN,
+        "",
+        "| arch | shape | mesh | flops/dev | peak GiB | coll GiB | compute s | memory s | coll s | dominant | frac | useful |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    singles = [r for r in reports if len(r["mesh"]) == 2]
+    multis = [r for r in reports if len(r["mesh"]) == 3]
+    for rs in (singles, multis):
+        for r in sorted(rs, key=lambda r: (r["arch"], r["shape"])):
+            cfg = get_config(r["arch"])
+            mf = model_flops(cfg, r["shape"])
+            useful = mf / (r["flops_per_dev"] * r["devices"]) \
+                if r["flops_per_dev"] else 0.0
+            rl = r["roofline"]
+            mesh = "x".join(str(m) for m in r["mesh"])
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} "
+                f"| {r['flops_per_dev']:.2e} "
+                f"| {r['memory'].get('peak_bytes', 0)/2**30:.1f} "
+                f"| {r['collectives']['total']/2**30:.1f} "
+                f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+                f"| {rl['collective_s']:.3f} | {rl['dominant'].replace('_s','')} "
+                f"| {rl['roofline_fraction']:.3f} | {min(useful, 9.99):.2f} |"
+            )
+    lines += ["", END]
+    return "\n".join(lines)
+
+
+def main():
+    directory = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun"
+    table = render(directory)
+    text = open("EXPERIMENTS.md").read()
+    if BEGIN in text:
+        pre = text.split(BEGIN)[0]
+        post = text.split(END)[1]
+        text = pre + table + post
+    elif "FINAL_TABLE_PLACEHOLDER" in text:
+        text = text.replace("FINAL_TABLE_PLACEHOLDER", "\n\n" + table + "\n")
+    else:
+        text += "\n" + table + "\n"
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated with",
+          table.count("\n") - 5, "rows")
+
+
+if __name__ == "__main__":
+    main()

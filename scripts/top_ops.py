@@ -1,0 +1,97 @@
+"""List the top flops/bytes contributors of a saved HLO module, trip-aware.
+
+    PYTHONPATH=src python scripts/top_ops.py <module.hlo.txt> [flops|bytes] [N]
+"""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hlo_analysis import (  # noqa: E402
+    _TRIP_RE, _LHS_CONTRACT_RE, _FIRST_OPERAND_RE,
+    _first_shape_dims, _parse_instr, _shape_bytes, parse_computations,
+)
+
+
+def main(path, mode="flops", topn=15):
+    txt = open(path).read()
+    comps, entry = parse_computations(txt)
+    symtab = {}
+    for cname, lines in comps.items():
+        tab = {}
+        for ln in lines:
+            pi = _parse_instr(ln)
+            if pi:
+                tab[pi[0]] = pi[1]
+        symtab[cname] = tab
+
+    # computation -> total trip multiplier (walk from entry)
+    mult = {entry: 1}
+    stack = [entry]
+    while stack:
+        c = stack.pop()
+        for ln in comps.get(c, []):
+            pi = _parse_instr(ln)
+            if not pi:
+                continue
+            _, _, op, after = pi
+            if op == "while":
+                tm = _TRIP_RE.search(ln)
+                t = int(tm.group(1)) if tm else 1
+                for pat in (r"body=%([\w\.\-]+)", r"condition=%([\w\.\-]+)"):
+                    m = re.search(pat, ln)
+                    if m and m.group(1) not in mult:
+                        mult[m.group(1)] = mult.get(c, 1) * t
+                        stack.append(m.group(1))
+            else:
+                m = re.search(r"(?:calls|to_apply)=%([\w\.\-]+)", after)
+                if m and m.group(1) not in mult:
+                    mult[m.group(1)] = mult.get(c, 1)
+                    stack.append(m.group(1))
+
+    items = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0)
+        if not m:
+            continue
+        tab = symtab[cname]
+        for ln in lines:
+            pi = _parse_instr(ln)
+            if not pi:
+                continue
+            name, rtype, op, after = pi
+            if mode == "flops":
+                if op != "dot":
+                    continue
+                dims = _first_shape_dims(rtype) or []
+                f = 2.0
+                for d in dims:
+                    f *= d
+                cm = _LHS_CONTRACT_RE.search(after)
+                om = _FIRST_OPERAND_RE.search(after)
+                lhs = ""
+                if cm and om:
+                    lhs = tab.get(om.group(1), "")
+                    ld = _first_shape_dims(lhs) or []
+                    for i in (int(i) for i in cm.group(1).split(",") if i):
+                        if i < len(ld):
+                            f *= ld[i]
+                meta = re.search(r'op_name="([^"]+)"', ln)
+                items.append((f * m, m, rtype[:40], lhs[:34],
+                              (meta.group(1).split("/")[-2:] if meta else ["?"])))
+            else:
+                if op in ("tuple", "get-tuple-element", "parameter", "bitcast",
+                          "while", "constant", "iota", "reshape", "call"):
+                    continue
+                items.append((2 * _shape_bytes(rtype) * m, m, op, rtype[:50],
+                              [cname[:30]]))
+    items.sort(reverse=True)
+    total = sum(i[0] for i in items)
+    print(f"total {mode}: {total:.4e}")
+    for val, m, a, b, meta in items[:topn]:
+        print(f"{val:.3e} x{m:<5d} {a:<42s} {b:<36s} {'/'.join(str(x) for x in meta)}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2] if len(sys.argv) > 2 else "flops",
+         int(sys.argv[3]) if len(sys.argv) > 3 else 15)

@@ -1,0 +1,10 @@
+"""gemma2-27b — local+global alternating, logit softcaps [arXiv:2408.00118; hf].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import GEMMA2_27B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

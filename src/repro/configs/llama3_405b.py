@@ -1,0 +1,10 @@
+"""llama3-405b — dense GQA, 128k vocab [arXiv:2407.21783].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import LLAMA3_405B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""mamba2-370m — SSD (state-space duality), attention-free [arXiv:2405.21060].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import MAMBA2_370M as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""mixtral-8x7b — 8 experts top-2, sliding-window attention [arXiv:2401.04088].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import MIXTRAL_8X7B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""olmoe-1b-7b — 64 experts top-8 [arXiv:2409.02060].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import OLMOE_1B_7B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""phi3-medium-14b — RoPE SwiGLU GQA [arXiv:2404.14219].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import PHI3_MEDIUM as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""pixtral-12b — ViT patch stub + mistral-nemo backbone [hf:mistralai/Pixtral-12B-2409].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import PIXTRAL_12B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""qwen2.5-14b — GQA with QKV bias [hf:Qwen/Qwen2.5-*].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import QWEN25_14B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,10 @@
+"""recurrentgemma-9b — RG-LRU + local attention 2:1 [arXiv:2402.19427].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import RECURRENTGEMMA_9B as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

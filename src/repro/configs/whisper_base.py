@@ -1,0 +1,10 @@
+"""whisper-base — enc-dec; conv frontend stubbed to frame embeddings [arXiv:2212.04356].
+
+Exact assigned config; see registry.py for the literal numbers and
+smoke_config() for the reduced CPU-test variant.
+"""
+
+from .registry import WHISPER_BASE as CONFIG
+from .registry import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

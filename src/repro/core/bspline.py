@@ -1,0 +1,156 @@
+"""Uniform B-spline basis — the float reference for KAN layers.
+
+The original KAN paper (Liu et al., arXiv:2404.19756) parameterizes each edge
+with ``spline(x) = sum_i c_i B_i(x)`` where ``B_i`` are order-K B-splines on a
+uniform ("knot") grid of G intervals over ``[lo, hi]``, extended by K intervals
+on each side, giving G+K basis functions.
+
+Because the knots are uniform, every ``B_i`` is a shifted copy of one canonical
+cardinal bump ``b_K`` supported on ``[0, K+1]`` (in knot units).  That is the
+property the paper's ASP-KAN-HAQ exploits (see ``asp_quant.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "extended_knots",
+    "bspline_basis",
+    "bspline_basis_fast",
+    "cardinal_bump",
+    "num_basis",
+]
+
+
+def num_basis(grid_size: int, order: int) -> int:
+    """Number of B-spline basis functions: G + K."""
+    return grid_size + order
+
+
+def extended_knots(lo: float, hi: float, grid_size: int, order: int) -> np.ndarray:
+    """Uniform knot vector extended by `order` intervals on each side.
+
+    Returns G + 2K + 1 knots: t_j = lo + (j - K) * h,  h = (hi-lo)/G.
+    """
+    h = (hi - lo) / grid_size
+    j = np.arange(grid_size + 2 * order + 1, dtype=np.float64)
+    return lo + (j - order) * h
+
+
+def bspline_basis(x: jax.Array, lo: float, hi: float, grid_size: int, order: int) -> jax.Array:
+    """Evaluate all G+K uniform B-spline bases at ``x`` (Cox–de Boor).
+
+    Args:
+      x: any shape, float.  Values outside [lo, hi] are clamped (KAN layers
+        calibrate [lo, hi] to the input range, matching pykan's grid update).
+      lo/hi: knot-grid domain.
+      grid_size: G (number of intervals).
+      order: K (spline order; K=3 → cubic).
+
+    Returns:
+      basis with shape ``x.shape + (G+K,)``; rows sum to 1 on [lo, hi].
+    """
+    knots = jnp.asarray(extended_knots(lo, hi, grid_size, order), dtype=x.dtype)
+    # Clamp into the open domain so degree-0 indicators behave at hi.
+    h = (hi - lo) / grid_size
+    eps = jnp.asarray(1e-6 * h, dtype=x.dtype)
+    xc = jnp.clip(x, lo, hi - eps)[..., None]  # (..., 1)
+
+    # Degree-0: indicator over each of the G+2K knot intervals.
+    t = knots  # (G+2K+1,)
+    b = jnp.where((xc >= t[:-1]) & (xc < t[1:]), 1.0, 0.0)  # (..., G+2K)
+
+    for k in range(1, order + 1):
+        # b currently holds degree-(k-1) bases over knots[:len] windows.
+        t_i = t[: -(k + 1)]
+        t_ik = t[k:-1]
+        t_i1 = t[1:-k]
+        t_ik1 = t[k + 1 :]
+        left = (xc - t_i) / (t_ik - t_i) * b[..., :-1]
+        right = (t_ik1 - xc) / (t_ik1 - t_i1) * b[..., 1:]
+        b = left + right
+
+    return b  # (..., G+K)
+
+
+@functools.lru_cache(maxsize=64)
+def _cardinal_bump_coeffs(order: int) -> np.ndarray:
+    """Polynomial coefficients of the canonical cardinal B-spline b_K.
+
+    b_K is supported on [0, K+1]; on segment s (t in [s, s+1)) it is a degree-K
+    polynomial in u = t - s.  Returns array (K+1, K+1): [segment, power].
+    Computed exactly with the Cox–de Boor recursion over polynomial coeffs.
+    """
+    # poly[s] = coeffs (low→high power of u) of degree-k bump on segment s.
+    # degree 0: one segment, constant 1 on [0,1).
+    polys = [np.array([[1.0]])]  # index k → (k+1 segments, k+1 coeffs)
+    for k in range(1, order + 1):
+        prev = polys[k - 1]  # (k, k)
+        cur = np.zeros((k + 1, k + 1))
+        # b_k(t) = t/k * b_{k-1}(t) + (k+1-t)/k * b_{k-1}(t-1)
+        for s in range(k + 1):
+            # term 1: (t/k) * prev on segment s (exists if s <= k-1)
+            if s <= k - 1:
+                p = prev[s]  # coeffs in u, t = s + u
+                # (s+u)/k * p(u)
+                cur[s, : k] += (s / k) * p
+                cur[s, 1 : k + 1] += (1.0 / k) * p
+            # term 2: ((k+1-t)/k) * prev evaluated at (t-1) on segment s-1 of prev
+            if 1 <= s <= k:
+                p = prev[s - 1]
+                # (k+1-s-u)/k * p(u)
+                cur[s, : k] += ((k + 1 - s) / k) * p
+                cur[s, 1 : k + 1] += (-1.0 / k) * p
+        polys.append(cur)
+    return polys[order]
+
+
+def bspline_basis_fast(x: jax.Array, lo: float, hi: float, grid_size: int,
+                       order: int) -> jax.Array:
+    """Uniform-knot basis via the shared cardinal-bump polynomial.
+
+    The ASP observation (all B_i are shifts of ONE bump) applied to the float
+    path: instead of the Cox-de Boor recursion (which materializes K
+    intermediate (x.shape, G+2K) f32 tensors — the dominant HBM traffic of
+    KAN-FFN training, §Perf cell 3), evaluate the K+1 active values as
+    degree-K polynomials in the intra-interval offset and place them at band
+    positions with iota compare/select.  Exactly equal to bspline_basis for
+    uniform knots (validated in tests).
+    """
+    h = (hi - lo) / grid_size
+    tau = jnp.clip((x.astype(jnp.float32) - lo) / h, 0.0, grid_size * (1 - 1e-7))
+    g = jnp.floor(tau)
+    u = tau - g
+    g = g.astype(jnp.int32)
+
+    coeffs = _cardinal_bump_coeffs(order)  # (K+1 segments, K+1 powers)
+    nb = grid_size + order
+    iota = jnp.arange(nb, dtype=jnp.int32)
+    basis = jnp.zeros(x.shape + (nb,), jnp.float32)
+    for d in range(order + 1):
+        seg = order - d  # active slot d lives on bump segment K-d
+        val = jnp.zeros_like(u)
+        for p in reversed(range(order + 1)):  # Horner
+            val = val * u + float(coeffs[seg, p])
+        basis = basis + jnp.where(
+            iota == (g + d)[..., None], val[..., None], 0.0
+        )
+    return basis
+
+
+def cardinal_bump(t: np.ndarray, order: int) -> np.ndarray:
+    """Evaluate the canonical cardinal B-spline b_K on [0, K+1] (numpy)."""
+    t = np.asarray(t, dtype=np.float64)
+    coeffs = _cardinal_bump_coeffs(order)
+    seg = np.clip(np.floor(t).astype(np.int64), 0, order)
+    u = t - seg
+    out = np.zeros_like(t)
+    for p in range(order + 1):
+        out += coeffs[seg, p] * u**p
+    out = np.where((t < 0) | (t > order + 1), 0.0, out)
+    return out

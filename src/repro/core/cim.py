@@ -1,0 +1,168 @@
+"""RRAM-ACIM behavioral simulator (paper §2.2, §3.3, Fig. 12).
+
+Models the analog MAC  y[c] = sum_r x[r] * w[r, c]  executed on word-line
+drives ``x`` (B(X) codes through the TM-DV input generator) against int8
+conductance weights ``w``, with the non-idealities the paper calibrates from
+TSMC 22nm RRAM-ACIM prototype measurements:
+
+  * **IR-drop** on the bit line: systematic attenuation of a cell's effective
+    contribution growing with (a) its physical distance from the BL clamp and
+    (b) total column current (longer/busier BLs drop more).  Scales with
+    array size — the paper's Fig. 12 sweeps 128..1024 rows.
+  * **Input-generator noise** (TM-DV / pure-voltage / pure-PWM), see tmdv.py.
+  * **Partial-sum error**: per-array Gaussian on the analog sum, std
+    calibrated to grow with sqrt(rows) (more cells -> more accumulated
+    device noise), plus ADC quantization of each array's partial sum.
+
+KAN-SAM enters as a physical row permutation (sam.py): the same logical MAC,
+different physical placement, different IR-drop exposure.
+
+The hot loop (tiled int MAC + error injection) has a Pallas kernel under
+``kernels/cim_mac``; this module is the pure-jnp reference and driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tmdv import TMDVConfig, TD_A, apply_input_noise
+
+__all__ = ["CIMConfig", "cim_matmul", "ideal_matmul", "irdrop_factors"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    """One RRAM-ACIM macro configuration."""
+
+    array_rows: int = 128
+    adc_bits: int = 8
+    # IR-drop coefficient: fractional loss for the FARTHEST row of a
+    # 128-row array at full column load (calibrated to Fig. 12's trend).
+    ir_gamma: float = 0.04
+    # Partial-sum noise std at 128 rows, in units of one LSB of input*weight.
+    sigma_ps_ref: float = 1.0
+    input_gen: TMDVConfig = dataclasses.field(default_factory=TD_A)
+    deterministic: bool = False  # disable stochastic noise (IR-drop stays)
+
+    def ir_scale(self) -> float:
+        """IR-drop grows with BL length; sub-linear (sqrt) in rows because
+        clamp drivers are upsized with array height (22nm chip trend)."""
+        return self.ir_gamma * float(np.sqrt(self.array_rows / 128.0))
+
+    def sigma_ps(self) -> float:
+        return self.sigma_ps_ref * float(np.sqrt(self.array_rows / 128.0))
+
+
+def irdrop_factors(cfg: CIMConfig, col_load: jax.Array) -> jax.Array:
+    """Effective-weight attenuation (rows, cols).
+
+    factor[p, c] = 1 - ir_scale * ((p+1)/rows) * col_load[c]
+    where physical row p=0 is nearest the clamp and col_load is the column's
+    normalized current (0..1).
+    """
+    rows = cfg.array_rows
+    dist = (jnp.arange(rows, dtype=jnp.float32) + 1.0) / rows
+    return 1.0 - cfg.ir_scale() * dist[:, None] * col_load[None, :]
+
+
+def ideal_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def cim_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CIMConfig,
+    key,
+    row_perm=None,
+    x_max: float | None = None,
+    adc_calibrate: bool = False,
+) -> jax.Array:
+    """Simulated ACIM MAC.
+
+    Args:
+      x: (B, R) non-negative WL input codes (float or int), already in
+        [0, 2**input_gen.total_bits - 1] scale.
+      w: (R, C) weights (int8-scale floats or ints).
+      cfg: macro config.
+      key: PRNG for stochastic noise.
+      row_perm: optional (R,) physical placement, perm[p] = logical row at
+        physical position p (KAN-SAM).  None -> natural order.
+      x_max: full-scale input code (for ADC ranging); default from input_gen.
+
+    Returns:
+      (B, C) float32 MAC result in the same scale as ideal x @ w.
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    bsz, r_total = x.shape
+    cols = w.shape[1]
+    rows = cfg.array_rows
+    if x_max is None:
+        x_max = float(2**cfg.input_gen.total_bits - 1)
+
+    if row_perm is not None:
+        perm = jnp.asarray(row_perm)
+        x = jnp.take(x, perm, axis=1)
+        w = jnp.take(w, perm, axis=0)
+
+    # pad logical rows up to a multiple of the array height
+    n_arrays = -(-r_total // rows)
+    pad = n_arrays * rows - r_total
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+
+    xt = x.reshape(bsz, n_arrays, rows).astype(jnp.float32)
+    wt = w.reshape(n_arrays, rows, cols).astype(jnp.float32)
+
+    k_in, k_ps = jax.random.split(key)
+    if cfg.deterministic:
+        x_eff = xt
+    else:
+        x_eff = apply_input_noise(xt, cfg.input_gen, k_in)
+
+    # column load: average fraction of full-scale current this column sinks
+    w_amax = jnp.maximum(jnp.abs(wt).max(), 1e-9)
+    col_load = (
+        jnp.einsum("bar,arc->ac", xt / x_max, jnp.abs(wt) / w_amax) / (rows * bsz)
+    )  # (arrays, cols): batch-mean column current
+    # normalize to the mean active column so ir_gamma is the attenuation of
+    # the FARTHEST row of a TYPICALLY-loaded column (chip-measurement units)
+    col_load = col_load / jnp.maximum(col_load.mean(), 1e-12)
+    dist = (jnp.arange(rows, dtype=jnp.float32) + 1.0) / rows
+    factor = 1.0 - cfg.ir_scale() * dist[None, :, None] * col_load[:, None, :]
+    factor = jnp.clip(factor, 0.0, 1.0)  # attenuation is physical: [0, 1]
+    w_eff = wt * factor  # (arrays, rows, cols)
+
+    partial = jnp.einsum("bar,arc->bac", x_eff, w_eff)
+
+    if not cfg.deterministic:
+        partial = partial + cfg.sigma_ps() * x_max * jax.random.normal(
+            k_ps, partial.shape
+        )
+
+    # digital calibration (standard at deployment): the MEAN attenuation of a
+    # column is deterministic and compensated by a per-column scale; what
+    # remains — and what KAN-SAM minimizes — is the row-placement-dependent
+    # residual.
+    mean_dist = float((rows + 1) / (2 * rows))
+    comp = 1.0 - cfg.ir_scale() * mean_dist * col_load  # (arrays, cols)
+    partial = partial / jnp.maximum(comp, 1e-3)[None]
+
+    # per-array ADC: quantize the partial sum over its full-scale range.
+    # worst-case ranging (x_max * sum|w|) is hugely pessimistic for sparse
+    # KAN drives; real macros calibrate the ADC range to observed partials.
+    if adc_calibrate:
+        ideal_partial = jnp.einsum("bar,arc->bac", xt, wt)
+        fs = 1.25 * jnp.maximum(jnp.abs(ideal_partial).max(axis=0), 1e-9)
+    else:
+        fs = x_max * jnp.maximum(jnp.abs(wt).sum(axis=1), 1e-9)  # (arrays, cols)
+    lsb = 2.0 * fs / (2**cfg.adc_bits)
+    partial = jnp.clip(partial, -fs[None], fs[None])
+    partial = jnp.round(partial / lsb[None]) * lsb[None]
+
+    return partial.sum(axis=1)

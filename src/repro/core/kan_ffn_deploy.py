@@ -1,0 +1,68 @@
+"""Deployment path for LM KAN-FFN layers: ASP-quantize + Pallas kernel.
+
+Closes the loop between the paper's edge-inference technique and the LM
+substrate: a trained KAN-FFN block (models/layers.init_ffn with
+ffn_kind="kan") is post-training-quantized with ASP-KAN-HAQ (int8 c', shared
+SH-LUT) and executed through the kernels/kan_spline Pallas kernel — the
+exact datapath the paper accelerates, at transformer width.
+
+    qffn = quantize_kan_ffn(ffn_params, cfg)
+    y = kan_ffn_apply_quantized(qffn, x, cfg, interpret=True)   # == ffn(x)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .asp_quant import quantize_input
+from .kan_layer import quantize_kan_layer
+
+__all__ = ["quantize_kan_ffn", "kan_ffn_apply_quantized"]
+
+
+def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
+    """Quantize both KANLinear halves of a KAN-FFN block.
+
+    ffn_params: {"c1","wb1","c2","wb2"} from models/layers.init_ffn.
+    Returns {"l1": qparams, "l2": qparams} (see kan_layer.quantize_kan_layer).
+    """
+    from ..models.layers import kan_ffn_spec
+
+    spec = kan_ffn_spec(cfg)
+    l1 = quantize_kan_layer({"c": ffn_params["c1"], "w_b": ffn_params["wb1"]},
+                            spec)
+    l2 = quantize_kan_layer({"c": ffn_params["c2"], "w_b": ffn_params["wb2"]},
+                            spec)
+    return {"l1": l1, "l2": l2}
+
+
+def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
+                            interpret: bool = False) -> jax.Array:
+    """Quantized KAN-FFN forward via the kan_spline Pallas kernel.
+
+    x: (B, S, D).  Mirrors models/layers.ffn(kind="kan"): each half applies
+    tanh domain squash -> ASP quantize -> SH-LUT banded matmul + ReLU branch.
+    """
+    from ..kernels.kan_spline.ops import kan_spline
+    from ..models.layers import kan_ffn_spec
+
+    spec = kan_ffn_spec(cfg)
+    b, s, d = x.shape
+
+    def half(q, h2d):
+        # spline term through the kernel on the tanh-squashed domain; the
+        # ReLU residual branch uses the RAW pre-squash input (matching the
+        # float path models/layers._kan_linear), so it is added outside.
+        codes = quantize_input(jnp.tanh(h2d.astype(jnp.float32)), spec)
+        wc = q["c_q"].astype(jnp.float32) * q["c_scale"]
+        zeros_wb = jnp.zeros((wc.shape[0], wc.shape[-1]), jnp.float32)
+        y = kan_spline(codes, q["lut"], wc, zeros_wb, spec,
+                       interpret=interpret)
+        wb = q["w_b_q"].astype(jnp.float32) * q["w_b_scale"]
+        return y + jax.nn.relu(h2d.astype(jnp.float32)) @ wb
+
+    h = half(qffn["l1"], x.reshape(b * s, d))
+    y = half(qffn["l2"], h)
+    return y.reshape(b, s, d).astype(x.dtype)

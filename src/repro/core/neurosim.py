@@ -1,0 +1,285 @@
+"""KAN-NeuroSim: hyperparameter optimization framework (paper §3.4, Fig. 9).
+
+Two steps:
+
+  * **Step 1** — constraint loop: given hardware constraints (area, energy,
+    latency) and KAN hyperparameters (dims, K, G, input method), evaluate the
+    accelerator cost model (costmodel.py, our NeuroSim extension) and shrink
+    G / switch TM-DV mode until the constraints hold.
+
+  * **Step 2** — grid extension training: train for N epochs; if validation
+    loss keeps decreasing AND the extended grid (G + E) still satisfies the
+    constraints, extend the grid (kan_layer.extend_layer_grid) and continue;
+    otherwise revert to the previous G and stop.
+
+RRAM non-ideal effects (partial-sum error, IR-drop — statistics in cim.py
+calibrated to the paper's TSMC 22nm measurements) are applied in the
+evaluation path so the searched hyperparameters are ACIM-aware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .asp_quant import ASPQuantSpec
+from .cim import CIMConfig, cim_matmul
+from .costmodel import accelerator_cost, kan_accelerator
+from .kan_layer import (
+    KANSpec,
+    extend_layer_grid,
+    init_kan_network,
+    kan_network_apply,
+    quantize_kan_layer,
+)
+from .sam import row_activation_weight, sam_permutation
+from .tmdv import TMDVConfig
+from ..train.optimizer import adamw, apply_updates
+
+__all__ = [
+    "HardwareConstraints",
+    "check_constraints",
+    "search_max_grid",
+    "train_kan",
+    "evaluate_accuracy",
+    "evaluate_accuracy_cim",
+    "grid_extension_train",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConstraints:
+    max_area_mm2: float = float("inf")
+    max_energy_pj: float = float("inf")
+    max_latency_ns: float = float("inf")
+
+
+def _cost_for(dims, grid_size, order, n_bits, input_gen, array_rows, adc_bits):
+    spec = ASPQuantSpec(grid_size=grid_size, order=order, n_bits=n_bits,
+                        lut_bits=n_bits, lo=-1.0, hi=1.0)
+    acc = kan_accelerator(dims, spec, input_gen, array_rows, adc_bits)
+    return accelerator_cost(acc)
+
+
+def check_constraints(cost: dict, hc: HardwareConstraints) -> bool:
+    return (
+        cost["area_mm2"] <= hc.max_area_mm2
+        and cost["energy_pj"] <= hc.max_energy_pj
+        and cost["latency_ns"] <= hc.max_latency_ns
+    )
+
+
+def search_max_grid(
+    dims,
+    hc: HardwareConstraints,
+    order: int = 3,
+    n_bits: int = 8,
+    input_gen: TMDVConfig | None = None,
+    array_rows: int = 128,
+    adc_bits: int = 8,
+    g_candidates=None,
+) -> tuple:
+    """Step 1: largest G whose accelerator satisfies the constraints.
+
+    Returns (best_G, cost dict) or (None, None) if even the smallest fails.
+    """
+    if input_gen is None:
+        input_gen = TMDVConfig(total_bits=n_bits, voltage_bits=n_bits // 2)
+    if g_candidates is None:
+        g_candidates = [g for g in range(1, 2**n_bits) if ASPQuantSpec(g, order, n_bits).ld >= 0]
+    best = (None, None)
+    for g in sorted(g_candidates):
+        try:
+            cost = _cost_for(dims, g, order, n_bits, input_gen, array_rows, adc_bits)
+        except ValueError:
+            continue
+        if check_constraints(cost, hc):
+            best = (g, cost)
+    return best
+
+
+# ----------------------------------------------------------------------------
+# Training / evaluation on a classification task (knot theory)
+# ----------------------------------------------------------------------------
+
+
+def _loss_fn(params, x, y, kspec):
+    logits = kan_network_apply(params, x, kspec)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def train_kan(
+    kspec: KANSpec,
+    x_train,
+    y_train,
+    x_val,
+    y_val,
+    epochs: int = 200,
+    batch_size: int = 1024,
+    lr: float = 3e-3,
+    seed: int = 0,
+    params=None,
+    verbose: bool = False,
+):
+    """Mini-batch AdamW training of a KAN stack; returns (params, history)."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = init_kan_network(key, kspec)
+    opt = adamw(lr, weight_decay=1e-4)
+    opt_state = opt.init(params)
+
+    x_train = jnp.asarray(x_train)
+    y_train = jnp.asarray(y_train)
+    n = x_train.shape[0]
+    steps = max(1, n // batch_size)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        loss, grads = jax.value_and_grad(_loss_fn)(params, xb, yb, kspec)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    @jax.jit
+    def val_loss(params):
+        return _loss_fn(params, jnp.asarray(x_val), jnp.asarray(y_val), kspec)
+
+    history = []
+    for ep in range(epochs):
+        key, sk = jax.random.split(key)
+        perm = jax.random.permutation(sk, n)
+        for s in range(steps):
+            idx = perm[s * batch_size : (s + 1) * batch_size]
+            params, opt_state, loss = step(params, opt_state, x_train[idx], y_train[idx])
+        history.append(float(val_loss(params)))
+        if verbose and (ep % 25 == 0 or ep == epochs - 1):
+            print(f"  epoch {ep}: val_loss {history[-1]:.4f}")
+    return params, history
+
+
+def evaluate_accuracy(params, x, y, kspec: KANSpec) -> float:
+    logits = kan_network_apply(params, jnp.asarray(x), kspec)
+    return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+
+
+def evaluate_accuracy_cim(
+    params,
+    x,
+    y,
+    kspec: KANSpec,
+    cim_cfg: CIMConfig,
+    key,
+    use_sam: bool = False,
+    calib_x=None,
+) -> float:
+    """Accuracy with the quantized spline path executed on the ACIM simulator.
+
+    The spline matmul of every layer runs through cim_matmul with the layer's
+    c' int8 rows as conductances and the dense basis as WL drives; KAN-SAM
+    optionally permutes the physical rows by activation probability.
+    """
+    from .asp_quant import dense_basis_from_codes, quantize_input
+
+    spec = kspec.layer_spec()
+    x = jnp.asarray(x)
+    h = x
+    n_layers = len(params)
+    for li, p in enumerate(params):
+        qp = quantize_kan_layer(p, spec)
+        codes = quantize_input(h, spec)
+        basis = dense_basis_from_codes(codes, qp["lut"], spec)  # (B, F, nb)
+        bsz, f, nb = basis.shape
+        # WL drives in code units (lut_bits full-scale)
+        drives = basis.reshape(bsz, f * nb) / float(qp["lut_scale"])
+        w_rows = (qp["c_q"].astype(jnp.float32)).reshape(f * nb, -1)
+        perm = None
+        if use_sam:
+            cx = h if calib_x is None or li > 0 else jnp.asarray(calib_x)
+            rw = row_activation_weight(cx if li == 0 else h, spec, f)
+            perm = sam_permutation(rw, cim_cfg.array_rows)
+        key, sk = jax.random.split(key)
+        acc = cim_matmul(drives, w_rows, cim_cfg, sk, row_perm=perm,
+                         x_max=float(2**spec.lut_bits - 1),
+                         adc_calibrate=True)
+        y_spline = acc * float(qp["lut_scale"]) * qp["c_scale"][None, :]
+        xq = jax.nn.relu(spec.lo + codes.astype(jnp.float32) * spec.code_step)
+        wb = qp["w_b_q"].astype(jnp.float32) * qp["w_b_scale"]
+        h = y_spline + xq @ wb
+        if li < n_layers - 1:
+            h = jnp.tanh(h) * (0.5 * (spec.hi - spec.lo)) + 0.5 * (spec.hi + spec.lo)
+    return float((jnp.argmax(h, -1) == jnp.asarray(y)).mean())
+
+
+# ----------------------------------------------------------------------------
+# Step 2: grid-extension training under constraints
+# ----------------------------------------------------------------------------
+
+
+def grid_extension_train(
+    dims,
+    hc: HardwareConstraints,
+    x_train,
+    y_train,
+    x_val,
+    y_val,
+    g_init: int = 3,
+    extend_by: int = 2,
+    epochs_per_round: int = 60,
+    max_rounds: int = 8,
+    order: int = 3,
+    n_bits: int = 8,
+    input_gen: TMDVConfig | None = None,
+    array_rows: int = 128,
+    adc_bits: int = 8,
+    seed: int = 0,
+    verbose: bool = False,
+):
+    """Paper Fig. 9 step 2.  Returns dict with final params/G/cost/history."""
+    if input_gen is None:
+        input_gen = TMDVConfig(total_bits=n_bits, voltage_bits=n_bits // 2)
+
+    g = g_init
+    kspec = KANSpec(dims=tuple(dims), grid_size=g, order=order, n_bits=n_bits,
+                    lut_bits=n_bits)
+    params, hist = train_kan(kspec, x_train, y_train, x_val, y_val,
+                             epochs=epochs_per_round, seed=seed, verbose=verbose)
+    best_val = hist[-1]
+    log = [{"G": g, "val_loss": best_val}]
+
+    for _ in range(max_rounds):
+        g_next = g + extend_by
+        try:
+            cost_next = _cost_for(dims, g_next, order, n_bits, input_gen,
+                                  array_rows, adc_bits)
+        except ValueError:
+            break  # G*2^LD no longer fits in n bits
+        if not check_constraints(cost_next, hc):
+            break  # hardware budget exceeded -> keep G_pre
+        params_pre, kspec_pre = params, kspec  # "1. G_pre = G"
+        spec = kspec.layer_spec()
+        params = [extend_layer_grid(p, spec, g_next) for p in params]
+        kspec = dataclasses.replace(kspec, grid_size=g_next)
+        params, hist = train_kan(kspec, x_train, y_train, x_val, y_val,
+                                 epochs=epochs_per_round, seed=seed,
+                                 params=params, verbose=verbose)
+        log.append({"G": g_next, "val_loss": hist[-1]})
+        if hist[-1] >= best_val:  # val loss stopped decreasing: "2. G = G_pre"
+            params, kspec = params_pre, kspec_pre
+            break
+        best_val = hist[-1]
+        g = g_next
+
+    cost = _cost_for(dims, g, order, n_bits, input_gen, array_rows, adc_bits)
+    return {
+        "params": params,
+        "kspec": kspec,
+        "G": g,
+        "cost": cost,
+        "log": log,
+    }

@@ -1,0 +1,88 @@
+"""KAN-SAM: sparsity-aware weight mapping (paper §3.3).
+
+Only K+1 of the G+K basis functions fire for any input, so the word-line rows
+of the c' array have very unequal activation probability.  IR-drop error on a
+BL grows with a row's distance from the clamping circuit, so mapping the
+highest-probability rows NEAREST the clamp minimizes the expected MAC error —
+a pure permutation, no hardware or algorithm change.
+
+Physical convention used throughout ``cim.py``: physical row 0 is closest to
+the BL clamp (lowest IR-drop error); error grows with physical row index.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .asp_quant import ASPQuantSpec, quantize_input
+
+__all__ = [
+    "basis_activation_probability",
+    "row_activation_weight",
+    "sam_permutation",
+    "identity_permutation",
+    "apply_row_permutation",
+]
+
+
+def basis_activation_probability(x_samples: jax.Array, spec: ASPQuantSpec) -> jax.Array:
+    """P_i = fraction of inputs for which B_i is active (g <= i <= g+K).
+
+    x_samples: (..., ) calibration inputs for ONE input feature (or pooled).
+    Returns (G+K,) probabilities.
+    """
+    codes = quantize_input(x_samples.reshape(-1), spec)
+    g = codes >> spec.ld  # active bands are g..g+K
+    nb = spec.num_basis
+    iota = jnp.arange(nb)
+    active = (iota[None, :] >= g[:, None]) & (iota[None, :] <= g[:, None] + spec.order)
+    return active.mean(axis=0)
+
+
+def row_activation_weight(
+    x_samples: jax.Array, spec: ASPQuantSpec, in_dim: int
+) -> jax.Array:
+    """Expected |current| weight per word-line row of a KAN layer.
+
+    Rows are the flattened (feature f, basis i) pairs, row = f * (G+K) + i.
+    x_samples: (S, in_dim) calibration batch.  The weight is
+    P(B_i active for x_f) * E[B_i(x_f) | active] ~ E[B_i(x_f)] — mean WL
+    drive, which is what loads the BL.
+    """
+    from .bspline import bspline_basis
+
+    b = bspline_basis(x_samples, spec.lo, spec.hi, spec.grid_size, spec.order)
+    mean_drive = b.mean(axis=0)  # (in_dim, G+K)
+    return mean_drive.reshape(in_dim * spec.num_basis)
+
+
+def sam_permutation(row_weight: jax.Array, array_rows: int | None = None) -> np.ndarray:
+    """perm[p] = logical row placed at physical (flat) position p.
+
+    Physical distance from the BL clamp of flat position p is
+    ((p % array_rows) + 1) / array_rows — the near-clamp slots are the FIRST
+    rows of EVERY array tile, so the highest expected-drive logical rows are
+    interleaved across tiles by increasing within-tile distance.
+    """
+    w = np.asarray(row_weight)
+    r = len(w)
+    best_first = np.argsort(-w, kind="stable")
+    if array_rows is None or array_rows >= r:
+        pos_by_dist = np.arange(r)
+    else:
+        dist = np.arange(r) % array_rows
+        pos_by_dist = np.argsort(dist, kind="stable")
+    perm = np.empty(r, np.int64)
+    perm[pos_by_dist] = best_first
+    return perm
+
+
+def identity_permutation(n_rows: int) -> np.ndarray:
+    return np.arange(n_rows)
+
+
+def apply_row_permutation(w_rows: jax.Array, perm) -> jax.Array:
+    """Place logical rows at their physical positions: out[p] = w[perm[p]]."""
+    return jnp.take(w_rows, jnp.asarray(perm), axis=0)

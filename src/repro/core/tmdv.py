@@ -1,0 +1,108 @@
+"""TM-DV-IG: N:1 Time-Modulation Dynamic-Voltage input generator (paper §3.2).
+
+Behavioral model of the mixed time/voltage word-line DAC.  A ``2N``-bit input
+code (a B(X) value from the SH-LUT) is split::
+
+    code = hi * 2**N + lo
+    hi (N bits) -> voltage level  V[hi]   (DAC configured so I[x] = x * I_u)
+    lo (N bits) -> pulse width    lo * W_p1
+
+and the charge integrated on the BL cap is::
+
+    Q = I[hi] * W_pN + I[1] * (lo * W_p1)     with W_pN = 2**N * W_p1
+      = (hi * 2**N + lo) * I_u * W_p1         (linear in the code)
+
+Noise model (all per-WL-event, Gaussian):
+  * voltage-domain: relative current-level noise sigma_v — scales with how
+    finely the VDD range is subdivided (more DAC levels -> smaller margin).
+  * time-domain: pulse-edge jitter sigma_t (in unit-pulse units) on each of
+    the two pulse events.
+
+The three input methods compared in the paper (Fig. 11) fall out of the same
+model:
+  * pure voltage : all 2N bits in voltage  -> 2**(2N) levels, 1 pulse slot.
+  * pure PWM     : all 2N bits in time     -> 1 level, up to 2**(2N) slots.
+  * TM-DV (N:1)  : N bits each             -> 2**N levels, 2**N slots.
+
+TD-P / TD-A modes move the split point: TD-P puts more bits in voltage
+(faster, noisier), TD-A more bits in time (slower, cleaner).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TMDVConfig", "TD_A", "TD_P", "PURE_VOLTAGE", "PURE_PWM", "apply_input_noise", "wl_latency_units"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TMDVConfig:
+    """total_bits = 2N in the paper; voltage_bits = bits carried by V."""
+
+    total_bits: int = 8
+    voltage_bits: int = 4
+    # Relative sigma of one DAC current level at 16 levels (4-bit) reference.
+    sigma_v_ref: float = 0.015
+    # Pulse-edge jitter in unit-pulse units.
+    sigma_t: float = 0.08
+
+    @property
+    def time_bits(self) -> int:
+        return self.total_bits - self.voltage_bits
+
+    @property
+    def num_levels(self) -> int:
+        return 2**self.voltage_bits
+
+    @property
+    def sigma_v(self) -> float:
+        # Noise margin shrinks linearly with the number of levels packed into
+        # the fixed VDD range; 16 levels is the reference point.
+        return self.sigma_v_ref * (self.num_levels / 16.0)
+
+
+def TD_A(total_bits: int = 8) -> TMDVConfig:
+    """High-accuracy mode: fewer voltage levels (N_v = total/2 - 1)."""
+    return TMDVConfig(total_bits=total_bits, voltage_bits=max(1, total_bits // 2 - 1))
+
+
+def TD_P(total_bits: int = 8) -> TMDVConfig:
+    """High-performance mode: more voltage levels (N_v = total/2 + 1)."""
+    return TMDVConfig(total_bits=total_bits, voltage_bits=min(total_bits - 1, total_bits // 2 + 1))
+
+
+def PURE_VOLTAGE(total_bits: int = 8) -> TMDVConfig:
+    return TMDVConfig(total_bits=total_bits, voltage_bits=total_bits)
+
+
+def PURE_PWM(total_bits: int = 8) -> TMDVConfig:
+    return TMDVConfig(total_bits=total_bits, voltage_bits=0)
+
+
+def wl_latency_units(cfg: TMDVConfig) -> int:
+    """WL activation window in unit pulses: the time field must fit."""
+    return max(1, 2**cfg.time_bits)
+
+
+def apply_input_noise(codes: jax.Array, cfg: TMDVConfig, key) -> jax.Array:
+    """codes (int, in [0, 2**total_bits - 1]) -> noisy effective charge.
+
+    Returns float "effective code" = Q / (I_u * W_p1); ideal value == codes.
+    """
+    codes = codes.astype(jnp.float32)
+    tmask = float(2**cfg.time_bits - 1) if cfg.time_bits > 0 else 0.0
+    hi = jnp.floor(codes / max(1, 2**cfg.time_bits))
+    lo = codes - hi * max(1, 2**cfg.time_bits)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # voltage-part charge: hi * 2**time_bits, with relative level noise
+    v_noise = 1.0 + cfg.sigma_v * jax.random.normal(k1, codes.shape)
+    q_v = hi * max(1, 2**cfg.time_bits) * v_noise
+    # time-part charge: lo (at unit current), edge jitter on both events
+    t_noise = cfg.sigma_t * jax.random.normal(k2, codes.shape)
+    q_t = jnp.where(lo > 0, lo + t_noise, 0.0)
+    # pure-PWM carries everything in lo; pure-voltage everything in hi
+    del tmask, k3
+    return q_v + q_t

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: tiled ACIM MAC with IR-drop + ADC quantization.
+
+The simulator hot loop for Fig. 12/13-scale studies: one grid step processes
+one (batch-tile x array x col-tile) cell; the array axis is the contraction —
+per-array partial sums are IR-drop-attenuated, ADC-quantized, then
+accumulated into the output tile.  The IR-drop factor is built in-register
+from the row-distance iota and the per-(array, col) load — nothing besides
+x/w tiles moves through HBM.
+
+Block shapes: rows = the physical array height (128..1024) stays whole (it
+is the analog summation — it cannot be split without changing semantics);
+batch and column tiles are MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cim_mac_kernel(
+    x_ref,      # (bB, 1, R)
+    w_ref,      # (1, R, bC)
+    load_ref,   # (1, bC)
+    fs_ref,     # (1, bC)
+    out_ref,    # (bB, bC)
+    *,
+    ir_scale: float,
+    adc_bits: int,
+):
+    a_step = pl.program_id(2)
+    x = x_ref[...][:, 0, :].astype(jnp.float32)        # (bB, R)
+    w = w_ref[...][0].astype(jnp.float32)              # (R, bC)
+    load = load_ref[...][0].astype(jnp.float32)        # (bC,)
+    fs = fs_ref[...][0].astype(jnp.float32)            # (bC,)
+
+    rows = w.shape[0]
+    dist = (
+        jax.lax.broadcasted_iota(jnp.float32, (rows, 1), 0) + 1.0
+    ) / rows                                           # (R, 1)
+    factor = jnp.clip(1.0 - ir_scale * dist * load[None, :], 0.0, 1.0)
+
+    partial = jax.lax.dot_general(
+        x, w * factor, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (bB, bC)
+
+    # per-column digital compensation of the mean attenuation (see cim.py)
+    mean_dist = (rows + 1.0) / (2.0 * rows)
+    comp = jnp.maximum(1.0 - ir_scale * mean_dist * load, 1e-3)
+    partial = partial / comp[None, :]
+
+    lsb = 2.0 * fs / (2.0**adc_bits)                   # (bC,)
+    partial = jnp.clip(partial, -fs[None, :], fs[None, :])
+    partial = jnp.round(partial / lsb[None, :]) * lsb[None, :]
+
+    @pl.when(a_step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(a_step > 0)
+    def _accum():
+        out_ref[...] += partial
+
+
+def cim_mac_pallas(
+    x: jax.Array,        # (B, A, R)
+    w: jax.Array,        # (A, R, C)
+    col_load: jax.Array, # (A, C)
+    fs: jax.Array,       # (A, C)
+    *,
+    ir_scale: float,
+    adc_bits: int,
+    block_b: int = 128,
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, n_arrays, rows = x.shape
+    cols = w.shape[-1]
+    assert bsz % block_b == 0 and cols % block_c == 0
+
+    grid = (bsz // block_b, cols // block_c, n_arrays)
+    kernel = functools.partial(
+        _cim_mac_kernel, ir_scale=ir_scale, adc_bits=adc_bits
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 1, rows), lambda i, j, a: (i, a, 0)),
+            pl.BlockSpec((1, rows, block_c), lambda i, j, a: (a, 0, j)),
+            pl.BlockSpec((1, block_c), lambda i, j, a: (a, j)),
+            pl.BlockSpec((1, block_c), lambda i, j, a: (a, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda i, j, a: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, cols), jnp.float32),
+        interpret=interpret,
+    )(x, w, col_load, fs)

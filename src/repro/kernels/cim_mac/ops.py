@@ -1,0 +1,65 @@
+"""jit'd wrapper for the cim_mac kernel: padding + tiling from flat (B, R)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cim_mac_pallas
+
+__all__ = ["cim_mac"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("array_rows", "ir_scale", "adc_bits", "block_b", "block_c", "interpret"),
+)
+def cim_mac(
+    x: jax.Array,   # (B, R_total) WL drives
+    w: jax.Array,   # (R_total, C) weights
+    *,
+    array_rows: int,
+    ir_scale: float,
+    adc_bits: int,
+    x_max: float,
+    block_b: int = 128,
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, r_total = x.shape
+    cols = w.shape[-1]
+    n_arrays = -(-r_total // array_rows)
+    rp = n_arrays * array_rows
+    x_p = jnp.pad(x, ((0, 0), (0, rp - r_total)))
+    w_p = jnp.pad(w, ((0, rp - r_total), (0, 0)))
+
+    bb = min(block_b, _round_up(bsz, 8))
+    bc = min(block_c, _round_up(cols, 128))
+    bp, cp = _round_up(bsz, bb), _round_up(cols, bc)
+    x_p = jnp.pad(x_p, ((0, bp - bsz), (0, 0))).reshape(bp, n_arrays, array_rows)
+    w_t = w_p.reshape(n_arrays, array_rows, cols)
+
+    # column load/full-scale on the REAL columns (normalizing over padded
+    # zero columns would inflate the effective IR coefficient), then pad
+    w_amax = jnp.maximum(jnp.abs(w_t).max(), 1e-9)
+    col_load = jnp.einsum(
+        "bar,arc->ac", x_p / x_max, jnp.abs(w_t) / w_amax
+    ) / (array_rows * bsz)  # normalize by REAL batch (padded rows are zero)
+    col_load = col_load / jnp.maximum(col_load.mean(), 1e-12)
+    fs = jnp.maximum(x_max * jnp.abs(w_t).sum(axis=1), 1e-9)  # (A, C)
+    col_load = jnp.pad(col_load, ((0, 0), (0, cp - cols)))
+    fs = jnp.pad(fs, ((0, 0), (0, cp - cols)), constant_values=1.0)
+    w_p = jnp.pad(w_t, ((0, 0), (0, 0), (0, cp - cols)))
+
+    out = cim_mac_pallas(
+        x_p, w_p, col_load, fs,
+        ir_scale=ir_scale, adc_bits=adc_bits,
+        block_b=bb, block_c=bc, interpret=interpret,
+    )
+    return out[:bsz, :cols]

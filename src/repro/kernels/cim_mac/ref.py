@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the cim_mac kernel: deterministic ACIM partial-sum path.
+
+Mirrors core.cim.cim_matmul with deterministic=True (the stochastic noise is
+added outside the kernel — it is elementwise on the per-array partials):
+
+  per array a:  w_eff[r,c] = w[a,r,c] * (1 - ir_scale * dist[r] * load[a,c])
+                partial[b,a,c] = sum_r x[b,a,r] * w_eff[r,c]
+                partial = adc_quantize(partial, fs[a,c], adc_bits)
+  out[b,c] = sum_a partial[b,a,c]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_mac_ref(
+    x: jax.Array,        # (B, A, R) float WL drives
+    w: jax.Array,        # (A, R, C) float weights
+    col_load: jax.Array, # (A, C) normalized column current
+    fs: jax.Array,       # (A, C) ADC full-scale per column
+    ir_scale: float,
+    adc_bits: int,
+) -> jax.Array:
+    _, _, rows = x.shape
+    dist = (jnp.arange(rows, dtype=jnp.float32) + 1.0) / rows
+    factor = jnp.clip(
+        1.0 - ir_scale * dist[None, :, None] * col_load[:, None, :], 0.0, 1.0
+    )
+    partial = jnp.einsum(
+        "bar,arc->bac", x.astype(jnp.float32), w.astype(jnp.float32) * factor
+    )
+    mean_dist = (rows + 1.0) / (2.0 * rows)
+    comp = jnp.maximum(1.0 - ir_scale * mean_dist * col_load, 1e-3)
+    partial = partial / comp[None]
+    lsb = 2.0 * fs / (2**adc_bits)
+    partial = jnp.clip(partial, -fs[None], fs[None])
+    partial = jnp.round(partial / lsb[None]) * lsb[None]
+    return partial.sum(axis=1)

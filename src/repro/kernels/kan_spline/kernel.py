@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fused ASP spline-basis construction + banded matmul.
+
+TPU-native realization of the paper's B(X) datapath (DESIGN.md §2):
+
+  * PowerGap bit split -> shift/mask on the VPU (replaces silicon decoders)
+  * SH-LUT retrieval   -> one-hot x (2**LD, K+1) matmul (replaces TG-MUXes;
+                          no per-element dynamic gather touches HBM)
+  * banded basis placement -> iota-compare/select against the interval index
+  * spline MAC         -> dense (bB, bF*(G+K)) x (bF*(G+K), bO) on the MXU
+                          ("B(X) on word lines x c' in the RRAM array")
+  * the w_b * relu(x) residual branch is fused into the same tile
+
+Grid: (B/bB, O/bO, F/bF); the F axis is the contraction — partial products
+accumulate into the output tile (revisited across the last grid dimension,
+per the TPU grid-iteration guarantee).
+
+VMEM per step ~ bB*bF*4 (codes) + 2**LD*(K+1)*4 (LUT) + bF*NB*bO*4 (wc tile)
++ bB*NB*bF*4 (basis tile) + bB*bO*4 (acc): with bB=bO=128, bF=256, NB=8 the
+working set is ~3.3 MiB — inside the 16 MiB v5e VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.asp_quant import ASPQuantSpec
+
+
+def _kan_spline_kernel(
+    codes_ref,  # (bB, bF) int32
+    lut_ref,    # (2**LD, K+1) f32
+    wc_ref,     # (bF * NB, bO) f32/bf16
+    wb_ref,     # (bF, bO) f32/bf16
+    out_ref,    # (bB, bO) f32
+    *,
+    spec: ASPQuantSpec,
+    block_f: int,
+):
+    k_step = pl.program_id(2)
+    nb = spec.num_basis
+    kk = spec.order + 1
+    n_local = spec.codes_per_interval
+
+    codes = codes_ref[...]
+    bb, bf = codes.shape
+
+    # --- PowerGap bit split (VPU shift/mask; the "decoder" is free)
+    g = jax.lax.shift_right_logical(codes, spec.ld)          # interval index
+    local = jax.lax.bitwise_and(codes, n_local - 1)          # offset in interval
+
+    # --- SH-LUT retrieval as one-hot matmul (2**LD is tiny: <= 32)
+    flat_local = local.reshape(bb * bf, 1)
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (bb * bf, n_local), 1)
+    onehot = (iota_l == flat_local).astype(jnp.float32)
+    lutv = jax.lax.dot_general(
+        onehot,
+        lut_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bb, bf, kk)                                    # (bB, bF, K+1)
+
+    # --- banded placement: basis[b, f, i] = lutv[b, f, i - g] if 0<=i-g<=K
+    iota_nb = jax.lax.broadcasted_iota(jnp.int32, (bb, bf, nb), 2)
+    d = iota_nb - g[..., None]
+    basis = jnp.zeros((bb, bf, nb), jnp.float32)
+    for dd in range(kk):  # static unroll: K+1 selects
+        basis = basis + jnp.where(d == dd, lutv[..., dd][..., None], 0.0)
+
+    # --- spline MAC on the MXU
+    acc = jax.lax.dot_general(
+        basis.reshape(bb, bf * nb),
+        wc_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- fused residual branch: relu(deq(codes)) @ wb
+    xdeq = spec.lo + codes.astype(jnp.float32) * spec.code_step
+    acc = acc + jax.lax.dot_general(
+        jnp.maximum(xdeq, 0.0),
+        wb_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(k_step > 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+def kan_spline_pallas(
+    codes: jax.Array,   # (B, F) int32
+    lut: jax.Array,     # (2**LD, K+1)
+    wc: jax.Array,      # (F * NB, O)  — flattened (f, i) rows
+    wb: jax.Array,      # (F, O)
+    spec: ASPQuantSpec,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_f: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call; caller guarantees divisibility (see ops.py)."""
+    bsz, f = codes.shape
+    o = wc.shape[-1]
+    nb = spec.num_basis
+    assert wc.shape[0] == f * nb, (wc.shape, f, nb)
+    assert bsz % block_b == 0 and o % block_o == 0 and f % block_f == 0
+
+    grid = (bsz // block_b, o // block_o, f // block_f)
+    kernel = functools.partial(_kan_spline_kernel, spec=spec, block_f=block_f)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_f), lambda i, j, k: (i, k)),
+            pl.BlockSpec(
+                (spec.codes_per_interval, spec.order + 1), lambda i, j, k: (0, 0)
+            ),
+            pl.BlockSpec((block_f * nb, block_o), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_f, block_o), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, o), jnp.float32),
+        interpret=interpret,
+    )(codes, lut, wc, wb)

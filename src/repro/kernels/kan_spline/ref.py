@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused ASP KAN-spline kernel.
+
+Computes, for quantized input codes (B, F):
+
+    basis[b, f, i] = SH-LUT value of B_i at code[b, f]   (i in [0, G+K))
+    y[b, o] = sum_{f,i} basis[b,f,i] * wc[f,i,o]  +  relu(deq(code[b,f])) * wb[f,o]
+
+This is the composition of asp_quant.dense_basis_from_codes with the banded
+matmul — the bit-exact contract the Pallas kernel is validated against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.asp_quant import ASPQuantSpec, dense_basis_from_codes
+
+
+def kan_spline_ref(
+    codes: jax.Array,   # (B, F) int32 in [0, G*2**LD)
+    lut: jax.Array,     # (2**LD, K+1) float
+    wc: jax.Array,      # (F, G+K, O) spline coefficients (c')
+    wb: jax.Array,      # (F, O) residual-branch weights
+    spec: ASPQuantSpec,
+) -> jax.Array:
+    basis = dense_basis_from_codes(codes, lut, spec)  # (B, F, G+K)
+    bsz, f, nb = basis.shape
+    o = wc.shape[-1]
+    y = basis.reshape(bsz, f * nb).astype(jnp.float32) @ wc.reshape(f * nb, o).astype(
+        jnp.float32
+    )
+    xdeq = spec.lo + codes.astype(jnp.float32) * spec.code_step
+    y = y + jax.nn.relu(xdeq) @ wb.astype(jnp.float32)
+    return y

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. eval_shape's the full train/serve state (no allocation anywhere),
+  3. jit-lowers the step with the sharding rules of dist/sharding.py,
+  4. compiles, and records memory_analysis() (proves per-device fit) +
+     cost_analysis() + the parsed collective schedule (feeds §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out reports/dryrun
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..configs.registry import ARCHS, LONG_OK, SHAPES, cells, get_config
+from ..dist import sharding as shd
+from ..models import model as M
+from ..train.train_state import init_state, make_train_step
+from .hlo_analysis import analyze_compiled
+from .mesh import make_production_mesh
+
+
+# ----------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ----------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Abstract (ShapeDtypeStruct) inputs for one cell — weak-type-correct,
+    shardable, never allocated."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if sh["kind"] == "train":
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif sh["kind"] == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a seq_len KV cache
+        spec = {
+            "token": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+    if cfg.family == "audio" and sh["kind"] != "decode":
+        spec["enc_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), f)
+    if cfg.family == "vlm" and sh["kind"] != "decode":
+        spec["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.patch_embed_dim), f
+        )
+    return spec
+
+
+def _batch_shardings(spec, mesh, batch_size):
+    bp = shd.batch_pspec(mesh, batch_size)
+
+    def one(s):
+        nd = len(s.shape)
+        parts = list(bp) + [None] * (nd - len(bp))
+        return NamedSharding(mesh, P(*parts[:nd]))
+
+    return jax.tree.map(one, spec)
+
+
+# ----------------------------------------------------------------------------
+# per-cell lowering
+# ----------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, mesh, save_hlo: str | None = None,
+               overrides: dict | None = None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    # activation-sharding constraint for the residual stream (per-microbatch
+    # batch for train; request batch for serve)
+    from ..models import layers as L
+
+    act_b = b // max(1, cfg.microbatch) if sh["kind"] == "train" else b
+    act_bp = shd.batch_pspec(mesh, act_b)
+    seq_ax = "model" if (cfg.seq_shard_acts and sh["kind"] == "train") else None
+    L.set_activation_spec(
+        jax.sharding.NamedSharding(mesh, P(*act_bp, seq_ax, None))
+    )
+
+    with mesh:
+        if sh["kind"] == "train":
+            state_shape = jax.eval_shape(lambda: init_state(key, cfg))
+            pspecs = {
+                "params": shd.param_pspecs(state_shape["params"], mesh),
+                "opt": shd.opt_state_pspecs(
+                    state_shape["opt"], state_shape["params"], mesh, zero1=True
+                ),
+                "step": P(),
+                "good_steps": P(),
+                "skipped_steps": P(),
+            }
+            state_shardings = shd.to_shardings(pspecs, mesh)
+            batch_spec = input_specs(cfg, shape_name)
+            batch_shardings = _batch_shardings(batch_spec, mesh, b)
+            mb = max(1, cfg.microbatch)
+            mb_spec = None
+            if mb > 1:
+                per_mb = b // mb
+                bp = shd.batch_pspec(mesh, per_mb)
+                mb_spec = jax.sharding.NamedSharding(mesh, P(None, *bp))
+            step = make_train_step(cfg, microbatch_spec=mb_spec)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_shardings, batch_shardings),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,),
+            ).lower(state_shape, batch_spec)
+        elif sh["kind"] == "prefill":
+            params_shape = jax.eval_shape(lambda: M.init_params(key, cfg))
+            pshard = shd.to_shardings(shd.param_pspecs(params_shape, mesh), mesh)
+            batch_spec = input_specs(cfg, shape_name)
+            batch_shardings = _batch_shardings(batch_spec, mesh, b)
+            cache_len = s + (cfg.num_patches if cfg.family == "vlm" else 0)
+            cache_shape = jax.eval_shape(
+                lambda p: M.init_cache(p, cfg, b, cache_len), params_shape
+            )
+            cache_shardings = shd.to_shardings(
+                shd.cache_pspecs(cache_shape, mesh, b), mesh
+            )
+
+            def prefill_step(params, batch):
+                return M.prefill(params, batch, cfg, max_len=cache_len)
+
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(pshard, batch_shardings),
+                out_shardings=(None, cache_shardings),
+            ).lower(params_shape, batch_spec)
+        else:  # decode
+            params_shape = jax.eval_shape(lambda: M.init_params(key, cfg))
+            pshard = shd.to_shardings(shd.param_pspecs(params_shape, mesh), mesh)
+            cache_len = s + (cfg.num_patches if cfg.family == "vlm" else 0)
+            cache_shape = jax.eval_shape(
+                lambda p: M.init_cache(p, cfg, b, cache_len), params_shape
+            )
+            cache_shardings = shd.to_shardings(
+                shd.cache_pspecs(cache_shape, mesh, b), mesh
+            )
+            tok_spec = input_specs(cfg, shape_name)
+            tok_shardings = _batch_shardings(tok_spec, mesh, b)
+
+            def serve_step(params, cache, token, pos):
+                return M.decode_step(params, cache, token, pos, cfg)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cache_shardings,
+                              tok_shardings["token"], tok_shardings["pos"]),
+                out_shardings=(None, cache_shardings),
+                donate_argnums=(1,),
+            ).lower(params_shape, cache_shape, tok_spec["token"], tok_spec["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    report = analyze_compiled(compiled, mesh.devices.size)
+    report.update(
+        arch=arch, shape=shape_name, kind=sh["kind"],
+        mesh=list(mesh.shape.values()), mesh_axes=list(mesh.axis_names),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+    )
+    if save_hlo:
+        with open(save_hlo, "w") as fh:
+            fh.write(compiled.as_text())
+    return report
+
+
+def _fmt(report):
+    r = report["roofline"]
+    mem = report.get("memory", {})
+    return (
+        f"{report['arch']:18s} {report['shape']:12s} mesh={report['mesh']} "
+        f"flops/dev={report['flops_per_dev']:.3e} "
+        f"peak_mem/dev={mem.get('peak_bytes', 0)/2**30:.2f}GiB "
+        f"coll/dev={report['collectives']['total']/2**20:.1f}MiB "
+        f"terms(c/m/n)=({r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+        f"{r['collective_s']:.4f})s dom={r['dominant']} "
+        f"roofline={r['roofline_fraction']:.2f} "
+        f"[lower {report['lower_s']}s compile {report['compile_s']}s]"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--set", default="", help="cfg overrides k=v,k=v (ints/floats/bools parsed)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set.split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=")
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                v = {"true": True, "false": False}.get(v.lower(), v)
+        overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape in todo:
+        for multi in meshes:
+            mesh = make_production_mesh(multi_pod=multi)
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            try:
+                hlo_path = (
+                    os.path.join(args.out, tag + ".hlo.txt") if args.save_hlo else None
+                )
+                report = lower_cell(arch, shape, mesh, save_hlo=hlo_path,
+                                    overrides=overrides)
+                print(_fmt(report), flush=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as fh:
+                    json.dump(report, fh, indent=1)
+            except Exception:
+                failures += 1
+                print(f"FAIL {tag}", flush=True)
+                traceback.print_exc()
+                with open(os.path.join(args.out, tag + ".FAILED"), "w") as fh:
+                    fh.write(traceback.format_exc())
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

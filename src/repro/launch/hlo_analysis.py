@@ -1,0 +1,310 @@
+"""Trip-count-aware HLO analysis: flops / memory traffic / collectives.
+
+XLA's flat ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so
+scan-over-layers and microbatch-accumulation loops (the whole point of the
+production lowering) are undercounted by their trip counts.  This module
+parses ``compiled.as_text()`` (the scheduled per-device SPMD module), builds
+the computation call graph, and expands:
+
+  * ``while``  -> body+condition x ``known_trip_count`` (backend_config)
+  * ``call``   -> callee (fully)
+  * ``fusion`` -> callee for FLOPs only (fusion internals are not HBM traffic)
+
+Costs:
+  * flops: 2 * prod(result_dims) * prod(lhs contracting dims) per ``dot``.
+  * bytes: 2 x sum of result-buffer sizes of traffic-producing instructions
+    (each buffer is written once and read ~once downstream) — a scheduled-
+    module HBM-traffic proxy.
+  * collective bytes: result sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (per-device payload).
+
+Roofline terms (v5e targets):
+    compute    = flops_per_device / 197e12        (bf16 MXU peak)
+    memory     = bytes_per_device / 819e9         (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9  (ICI per link)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NO_TRAFFIC_OPS = {
+    "tuple", "get-tuple-element", "parameter", "bitcast", "while",
+    "constant", "after-all", "iota", "reshape", "conditional", "call",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def parse_computations(text: str):
+    """-> (comps: name -> [instruction lines], entry_name)."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if (line.startswith("%") or line.startswith("ENTRY")) and \
+                line.rstrip().endswith("{"):
+            header = line[len("ENTRY "):] if line.startswith("ENTRY") else line
+            name = header.split(" ", 1)[0].lstrip("%")
+            comps[name] = []
+            cur = name
+            if line.startswith("ENTRY"):
+                entry = name
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None and "=" in line:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _parse_instr(ln: str):
+    """-> (name, result_type, op, operands_and_attrs) or None.
+
+    Handles tuple result types containing nested parens and /*index=N*/
+    comments, which defeat single-regex parsing.
+    """
+    s = ln
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        rtype = rest[: end + 1]
+        after = rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        after = rest[sp + 1:]
+    m = re.match(r"([\w\-]+)\(", after)
+    if not m:
+        return None
+    return name, rtype, m.group(1), after
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FIRST_OPERAND_RE = re.compile(r"\(\s*%([\w\.\-]+)")
+
+
+class _CompCost:
+    __slots__ = ("flops", "bytes", "coll", "coll_by_kind", "unknown_trips")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = 0.0
+        self.coll_by_kind = defaultdict(float)
+        self.unknown_trips = 0
+
+    def add(self, other, mult=1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll += other.coll * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v * mult
+        self.unknown_trips += other.unknown_trips
+
+
+def _analyze_module(text: str) -> dict:
+    comps, entry = parse_computations(text)
+
+    # per-computation symbol tables: instr name -> result type string
+    symtab = {}
+    for cname, lines in comps.items():
+        tab = {}
+        for ln in lines:
+            pi = _parse_instr(ln)
+            if pi:
+                tab[pi[0]] = pi[1]
+        symtab[cname] = tab
+
+    memo: dict = {}
+
+    def cost_of(cname: str, stack=()) -> _CompCost:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack or cname not in comps:
+            return _CompCost()
+        out = _CompCost()
+        tab = symtab[cname]
+        for ln in comps[cname]:
+            pi = _parse_instr(ln)
+            if pi is None:
+                continue
+            _, rtype, op, after = pi
+
+            if op == "while":
+                tm = _TRIP_RE.search(ln)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    out.unknown_trips += 1
+                bm = re.search(r"body=%([\w\.\-]+)", ln)
+                cm = _COND_RE.search(ln)
+                if bm:
+                    out.add(cost_of(bm.group(1), stack + (cname,)), trips)
+                if cm:
+                    out.add(cost_of(cm.group(1), stack + (cname,)), trips)
+                continue
+
+            if op == "call":
+                cm = re.search(r"to_apply=%([\w\.\-]+)", ln)
+                if cm:
+                    out.add(cost_of(cm.group(1), stack + (cname,)))
+                continue
+
+            if op == "fusion":
+                cm = re.search(r"calls=%([\w\.\-]+)", ln)
+                if cm:
+                    sub = cost_of(cm.group(1), stack + (cname,))
+                    out.flops += sub.flops  # dots inside fusions still count
+                out.bytes += 2 * _shape_bytes(rtype)
+                continue
+
+            if op == "dot":
+                dims = _first_shape_dims(rtype) or []
+                flops = 2.0
+                for d in dims:
+                    flops *= d
+                cm = _LHS_CONTRACT_RE.search(after)
+                opm = _FIRST_OPERAND_RE.search(after)
+                if cm and opm:
+                    lhs_type = tab.get(opm.group(1), "")
+                    lhs_dims = _first_shape_dims(lhs_type) or []
+                    for idx in (int(i) for i in cm.group(1).split(",") if i):
+                        if idx < len(lhs_dims):
+                            flops *= lhs_dims[idx]
+                out.flops += flops
+                out.bytes += 2 * _shape_bytes(rtype)
+                continue
+
+            is_coll = False
+            for c in _COLLECTIVES:
+                if op == c or op == c + "-start":
+                    nbytes = _shape_bytes(rtype)
+                    out.coll += nbytes
+                    out.coll_by_kind[c] += nbytes
+                    out.bytes += 2 * nbytes
+                    is_coll = True
+                    break
+            if is_coll:
+                continue
+
+            if op in _NO_TRAFFIC_OPS or op.endswith("-done"):
+                continue
+            out.bytes += 2 * _shape_bytes(rtype)
+        memo[cname] = out
+        return out
+
+    total = cost_of(entry) if entry else _CompCost()
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "collective_bytes": total.coll,
+        "collective_by_kind": dict(total.coll_by_kind),
+        "unknown_trip_loops": total.unknown_trips,
+    }
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             coll_bytes_per_dev: float) -> dict:
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["step_time_lb_s"] = bound
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return terms
+
+
+def analyze_compiled(compiled, mesh_devices: int) -> dict:
+    """Full report from a jax compiled artifact (per-device numbers)."""
+    txt = compiled.as_text()
+    parsed = _analyze_module(txt)
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        mem["peak_bytes"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+            - mem["alias_bytes"]
+        )
+    coll = dict(parsed["collective_by_kind"])
+    coll["total"] = parsed["collective_bytes"]
+    return {
+        "devices": mesh_devices,
+        "flops_per_dev": parsed["flops"],
+        "bytes_per_dev": parsed["bytes"],
+        "collectives": coll,
+        "unknown_trip_loops": parsed["unknown_trip_loops"],
+        "xla_flat_flops": float(ca.get("flops", 0.0)),
+        "xla_flat_bytes": float(ca.get("bytes accessed", 0.0)),
+        "memory": mem,
+        "roofline": roofline(
+            parsed["flops"], parsed["bytes"], parsed["collective_bytes"]
+        ),
+    }

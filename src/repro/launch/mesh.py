@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+make_production_mesh is a FUNCTION (not module-level state) so importing this
+module never touches jax device initialization — only dryrun.py (which sets
+XLA_FLAGS first) materializes the 512-way host-device mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: (16,16)=256 chips single-pod; (2,16,16)=512 two-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU demos)."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,177 @@
+"""Model assembly: embeddings, stacks, heads; train/prefill/decode entries.
+
+Families:
+  * dense/moe/ssm/hybrid: decoder-only LM over tokens.
+  * audio (whisper): encoder over STUB frame embeddings (the conv frontend is
+    out of scope per the assignment; ``input_specs`` supplies precomputed
+    (B, enc_seq, d_model) frames) + decoder with cross-attention.
+  * vlm (pixtral): STUB patch embeddings (B, num_patches, patch_embed_dim)
+    projected and prepended to the token sequence.
+
+Batch dicts:
+  train:   {"tokens": (B,S) int32, "targets": (B,S) int32}  (+stub embeds)
+  prefill: {"tokens": (B,S)}  (+stub embeds)
+  decode:  {"token": (B,) int32, "pos": (B,) int32} + cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .transformer import (
+    init_stack,
+    init_stack_cache,
+    stack_decode,
+    stack_forward,
+    stack_prefill,
+)
+
+Params = Any
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: dict = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), dt)
+        * 0.02,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "decoder": init_stack(keys[1], cfg, cross=cfg.encoder_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size), dt) * 0.02
+        )
+    if cfg.encoder_layers > 0:
+        enc_cfg = dataclasses.replace(
+            cfg,
+            num_layers=cfg.encoder_layers,
+            attn_pattern=("bidir",),
+            num_experts=0,
+        )
+        p["encoder"] = init_stack(keys[3], enc_cfg, cross=False)
+        p["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    if cfg.family == "vlm":
+        p["patch_proj"] = (
+            jax.random.normal(keys[4], (cfg.patch_embed_dim, cfg.d_model), dt)
+            * (1.0 / jnp.sqrt(cfg.patch_embed_dim).astype(jnp.float32))
+        ).astype(dt)
+    return p
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, attn_pattern=("bidir",), num_experts=0
+    )
+
+
+# ----------------------------------------------------------------------------
+# embedding / head
+# ----------------------------------------------------------------------------
+
+
+def _embed_tokens(p, tokens, cfg: ModelConfig):
+    h = jnp.take(p["embed"], tokens, axis=0)
+    return h * jnp.asarray(jnp.sqrt(float(cfg.d_model)), h.dtype)
+
+
+def _lm_logits(p, h, cfg: ModelConfig):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = (h @ w).astype(jnp.float32)
+    return L.softcap(logits, cfg.final_logit_softcap)
+
+
+def _encode(p, batch, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings (+ sinusoidal positions)."""
+    frames = batch["enc_embeds"].astype(jnp.dtype(cfg.dtype))
+    pos = L.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    h = frames + pos[None]
+    h = stack_forward(p["encoder"], h, _encoder_cfg(cfg))
+    return L.rmsnorm(p["enc_norm"], h, cfg.norm_eps)
+
+
+def _prepend_patches(p, h_tokens, batch, cfg: ModelConfig):
+    patches = batch["patch_embeds"].astype(jnp.dtype(cfg.dtype)) @ p["patch_proj"]
+    return jnp.concatenate([patches, h_tokens], axis=1)
+
+
+# ----------------------------------------------------------------------------
+# forward / loss (training + evaluation)
+# ----------------------------------------------------------------------------
+
+
+def forward(p, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_tokens(p, tokens, cfg)
+    enc_out = None
+    n_prefix = 0
+    if cfg.encoder_layers > 0:
+        enc_out = _encode(p, batch, cfg)
+    if cfg.family == "vlm":
+        h = _prepend_patches(p, h, batch, cfg)
+        n_prefix = h.shape[1] - s
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1])[None], h.shape[:2])
+    h = stack_forward(p["decoder"], h, cfg, positions=positions, enc_out=enc_out)
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    if n_prefix:
+        h = h[:, n_prefix:]
+    return _lm_logits(p, h, cfg)
+
+
+def loss_fn(p, batch, cfg: ModelConfig):
+    logits = forward(p, batch, cfg)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ----------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ----------------------------------------------------------------------------
+
+
+def init_cache(p, cfg: ModelConfig, batch: int, max_len: int):
+    enc_len = cfg.enc_seq if cfg.encoder_layers > 0 else 0
+    return init_stack_cache(cfg, p["decoder"], batch, max_len, enc_len=enc_len)
+
+
+def prefill(p, batch, cfg: ModelConfig, max_len: int):
+    """Process the prompt; returns (last-token logits, filled cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_tokens(p, tokens, cfg)
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = _encode(p, batch, cfg)
+    if cfg.family == "vlm":
+        h = _prepend_patches(p, h, batch, cfg)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1])[None], h.shape[:2])
+    cache = init_cache(p, cfg, b, max_len)
+    h, cache = stack_prefill(p["decoder"], cache, h, cfg, positions=positions,
+                             enc_out=enc_out)
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return _lm_logits(p, h[:, -1:, :], cfg)[:, 0], cache
+
+
+def decode_step(p, cache, token, pos, cfg: ModelConfig):
+    """token: (B,) int32; pos: (B,) int32.  Returns (logits (B,V), cache)."""
+    h = _embed_tokens(p, token[:, None], cfg)
+    h, cache = stack_decode(p["decoder"], cache, h, pos, cfg)
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return _lm_logits(p, h, cfg)[:, 0], cache

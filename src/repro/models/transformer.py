@@ -1,0 +1,322 @@
+"""Decoder-only / encoder-decoder transformer stack over mixed layer kinds.
+
+Layers are organized into REPEATING BLOCKS given by cfg.attn_pattern (e.g.
+gemma2: ("local","global"); recurrentgemma: ("rglru","rglru","local");
+mamba2: ("ssm",)).  Params for each group are STACKED over repeats so the
+stack runs under jax.lax.scan with one compiled block body — essential to
+keep HLO size flat in depth for the 126-layer dry-runs — with an unrolled
+remainder group when num_layers % len(pattern) != 0.
+
+Remat: each scanned block body is wrapped in jax.checkpoint when cfg.remat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+Params = Any
+
+
+# ----------------------------------------------------------------------------
+# Group structure
+# ----------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ModelConfig):
+    """[(kinds_tuple, repeats)] — one scanned group + optional remainder."""
+    period = len(cfg.attn_pattern)
+    full, rem = divmod(cfg.num_layers, period)
+    groups = []
+    if full:
+        groups.append((tuple(cfg.attn_pattern), full))
+    if rem:
+        groups.append((tuple(cfg.attn_pattern[:rem]), 1))
+    return groups
+
+
+def _init_block(key, cfg: ModelConfig, kinds, cross: bool):
+    """One block = len(kinds) layers; returns params dict keyed l{i}_*."""
+    p = {}
+    for i, kind in enumerate(kinds):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        if kind in ("global", "local", "bidir"):
+            p[f"l{i}_attn"] = L.init_attention(k1, cfg)
+            p[f"l{i}_ln1"] = L.init_rmsnorm(cfg.d_model)
+        elif kind == "rglru":
+            p[f"l{i}_rnn"] = L.init_rglru(k1, cfg)
+            p[f"l{i}_ln1"] = L.init_rmsnorm(cfg.d_model)
+        elif kind == "ssm":
+            p[f"l{i}_ssm"] = L.init_mamba2(k1, cfg)
+            p[f"l{i}_ln1"] = L.init_rmsnorm(cfg.d_model)
+        else:
+            raise ValueError(kind)
+        if cross and kind != "ssm":
+            p[f"l{i}_xattn"] = L.init_attention(k2, cfg, cross=True)
+            p[f"l{i}_lnx"] = L.init_rmsnorm(cfg.d_model)
+        if kind != "ssm" and cfg.ffn_kind != "none":
+            if cfg.num_experts > 0:
+                p[f"l{i}_moe"] = L.init_moe(k3, cfg)
+            else:
+                p[f"l{i}_ffn"] = L.init_ffn(k3, cfg)
+            p[f"l{i}_ln2"] = L.init_rmsnorm(cfg.d_model)
+        if cfg.post_norms:
+            p[f"l{i}_pn1"] = L.init_rmsnorm(cfg.d_model)
+            if kind != "ssm" and cfg.ffn_kind != "none":
+                p[f"l{i}_pn2"] = L.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def init_stack(key, cfg: ModelConfig, cross: bool = False):
+    """Stacked params per group (leading dim = repeats).  Group structure
+    (kinds, repeats) is STATIC — recomputed from cfg via layer_groups(), never
+    stored in the pytree (params must stay a pure array tree for jit)."""
+    groups = []
+    for kinds, repeats in layer_groups(cfg):
+        keys = jax.random.split(key, repeats + 1)
+        key = keys[0]
+        blocks = [_init_block(k, cfg, kinds, cross) for k in keys[1:]]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *blocks))
+    return groups
+
+
+# ----------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ----------------------------------------------------------------------------
+
+
+def _block_fwd(bp, x, cfg: ModelConfig, kinds, positions, enc_out):
+    x = L.constrain_act(x)
+    for i, kind in enumerate(kinds):
+        h = L.rmsnorm(bp[f"l{i}_ln1"], x, cfg.norm_eps)
+        if kind in ("global", "local", "bidir"):
+            h = L.attention(bp[f"l{i}_attn"], h, cfg, kind, positions)
+        elif kind == "rglru":
+            h, _ = L.rglru(bp[f"l{i}_rnn"], h, cfg)
+        elif kind == "ssm":
+            h, _ = L.mamba2(bp[f"l{i}_ssm"], h, cfg)
+        if cfg.post_norms:
+            h = L.rmsnorm(bp[f"l{i}_pn1"], h, cfg.norm_eps)
+        x = L.constrain_act(x + h)
+        if f"l{i}_xattn" in bp:
+            h = L.rmsnorm(bp[f"l{i}_lnx"], x, cfg.norm_eps)
+            h = L.attention(bp[f"l{i}_xattn"], h, cfg, "cross", enc_out=enc_out)
+            x = x + h
+        if f"l{i}_ffn" in bp or f"l{i}_moe" in bp:
+            h = L.rmsnorm(bp[f"l{i}_ln2"], x, cfg.norm_eps)
+            if f"l{i}_moe" in bp:
+                h = L.moe(bp[f"l{i}_moe"], h, cfg)
+            else:
+                h = L.ffn(bp[f"l{i}_ffn"], h, cfg)
+            if cfg.post_norms:
+                h = L.rmsnorm(bp[f"l{i}_pn2"], h, cfg.norm_eps)
+            x = L.constrain_act(x + h)
+    return x
+
+
+def stack_forward(groups, x, cfg: ModelConfig, positions=None, enc_out=None):
+    for gp, (kinds, repeats) in zip(groups, layer_groups(cfg)):
+        body = functools.partial(
+            _block_fwd, cfg=cfg, kinds=kinds, positions=positions, enc_out=enc_out
+        )
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers and repeats > 1:
+            def scan_body(carry, bp):
+                return body(bp, carry), None
+
+            x, _ = jax.lax.scan(scan_body, x, gp)
+        else:
+            for r in range(repeats):
+                bp = jax.tree.map(lambda a: a[r], gp)
+                x = body(bp, x)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# Decode (single token) with per-group stacked caches
+# ----------------------------------------------------------------------------
+
+
+def init_stack_cache(cfg: ModelConfig, groups, batch: int, max_len: int,
+                     enc_len: int = 0):
+    """Cache pytree mirroring the group structure (leading dim = repeats)."""
+    caches = []
+    del groups  # structure comes from cfg
+    for kinds, repeats in layer_groups(cfg):
+        one = {}
+        for i, kind in enumerate(kinds):
+            if kind in ("global", "local", "bidir"):
+                one[f"l{i}_kv"] = L.init_kv_cache(cfg, batch, max_len, kind)
+            elif kind == "rglru":
+                one[f"l{i}_rnn"] = L.init_rglru_state(cfg, batch)
+            elif kind == "ssm":
+                one[f"l{i}_ssm"] = L.init_mamba2_state(cfg, batch)
+            if enc_len > 0 and kind != "ssm":  # cross-attention K/V
+                one[f"l{i}_xkv"] = {
+                    "k": jnp.zeros((batch, enc_len, cfg.phys_kv_heads,
+                                    cfg.head_dim), jnp.dtype(cfg.dtype)),
+                    "v": jnp.zeros((batch, enc_len, cfg.phys_kv_heads,
+                                    cfg.head_dim), jnp.dtype(cfg.dtype)),
+                }
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (repeats,) + a.shape).copy(), one
+        )
+        caches.append(stacked)
+    return caches
+
+
+def _block_decode(bp, cache, x, pos, cfg: ModelConfig, kinds):
+    new_cache = dict(cache)
+    for i, kind in enumerate(kinds):
+        h = L.rmsnorm(bp[f"l{i}_ln1"], x, cfg.norm_eps)
+        if kind in ("global", "local", "bidir"):
+            h, new_cache[f"l{i}_kv"] = L.attention_decode(
+                bp[f"l{i}_attn"], h, cache[f"l{i}_kv"], pos, cfg,
+                "local" if kind == "local" else "global",
+            )
+        elif kind == "rglru":
+            h, new_cache[f"l{i}_rnn"] = L.rglru(
+                bp[f"l{i}_rnn"], h, cfg, state=cache[f"l{i}_rnn"]
+            )
+        elif kind == "ssm":
+            h, new_cache[f"l{i}_ssm"] = L.mamba2(
+                bp[f"l{i}_ssm"], h, cfg, state=cache[f"l{i}_ssm"]
+            )
+        if cfg.post_norms:
+            h = L.rmsnorm(bp[f"l{i}_pn1"], h, cfg.norm_eps)
+        x = x + h
+        if f"l{i}_xattn" in bp:
+            h = L.rmsnorm(bp[f"l{i}_lnx"], x, cfg.norm_eps)
+            h, _ = L.attention_decode(
+                bp[f"l{i}_xattn"], h, cache[f"l{i}_xkv"], pos, cfg, "cross"
+            )
+            x = x + h
+        if f"l{i}_ffn" in bp or f"l{i}_moe" in bp:
+            h = L.rmsnorm(bp[f"l{i}_ln2"], x, cfg.norm_eps)
+            if f"l{i}_moe" in bp:
+                h = L.moe(bp[f"l{i}_moe"], h, cfg)
+            else:
+                h = L.ffn(bp[f"l{i}_ffn"], h, cfg)
+            if cfg.post_norms:
+                h = L.rmsnorm(bp[f"l{i}_pn2"], h, cfg.norm_eps)
+            x = x + h
+    return x, new_cache
+
+
+def stack_decode(groups, caches, x, pos, cfg: ModelConfig):
+    new_caches = []
+    for gp, cache, (kinds, repeats) in zip(groups, caches, layer_groups(cfg)):
+        body = functools.partial(_block_decode, cfg=cfg, kinds=kinds)
+        if cfg.scan_layers and repeats > 1:
+            def scan_body(carry, inp):
+                bp, c = inp
+                y, nc = body(bp, c, carry, pos)
+                return y, nc
+
+            x, nc = jax.lax.scan(scan_body, x, (gp, cache))
+            new_caches.append(nc)
+        else:
+            ncs = []
+            for r in range(repeats):
+                bp = jax.tree.map(lambda a: a[r], gp)
+                c = jax.tree.map(lambda a: a[r], cache)
+                x, nc = body(bp, c, x, pos)
+                ncs.append(nc)
+            new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    return x, new_caches
+
+
+# ----------------------------------------------------------------------------
+# Prefill: full-sequence forward that ALSO materializes the KV caches
+# ----------------------------------------------------------------------------
+
+
+def _block_prefill(bp, cache, x, cfg: ModelConfig, kinds, positions, enc_out):
+    """Run a block over the whole prompt, filling caches."""
+    new_cache = dict(cache)
+    x = L.constrain_act(x)
+    b, s, _ = x.shape
+    for i, kind in enumerate(kinds):
+        h = L.rmsnorm(bp[f"l{i}_ln1"], x, cfg.norm_eps)
+        if kind in ("global", "local", "bidir"):
+            akind = kind if kind != "bidir" else "bidir"
+            q, k, v = L._qkv(bp[f"l{i}_attn"], h, cfg, kind != "bidir", positions)
+            kv = cache[f"l{i}_kv"]
+            t = kv["k"].shape[1]
+            if kind == "local" and t < s:
+                # rolling window: keep the last `t` positions
+                ck = jax.lax.dynamic_slice_in_dim(k, s - t, t, axis=1)
+                cv = jax.lax.dynamic_slice_in_dim(v, s - t, t, axis=1)
+                # roll so that slot = pos % window
+                shift = (s - t) % t
+                ck = jnp.roll(ck, shift, axis=1)
+                cv = jnp.roll(cv, shift, axis=1)
+            else:
+                ck = kv["k"].at[:, :s].set(k.astype(kv["k"].dtype))
+                cv = kv["v"].at[:, :s].set(v.astype(kv["v"].dtype))
+            new_cache[f"l{i}_kv"] = {"k": ck, "v": cv}
+            h = L._sdpa(q, k, v, cfg, kind)
+            h = jnp.einsum("bshk,hkd->bsd", h, bp[f"l{i}_attn"]["wo"])
+        elif kind == "rglru":
+            h, st = L.rglru_prefill(bp[f"l{i}_rnn"], h, cfg)
+            new_cache[f"l{i}_rnn"] = st
+        elif kind == "ssm":
+            h, st = L.mamba2_prefill(bp[f"l{i}_ssm"], h, cfg)
+            new_cache[f"l{i}_ssm"] = st
+        if cfg.post_norms:
+            h = L.rmsnorm(bp[f"l{i}_pn1"], h, cfg.norm_eps)
+        x = L.constrain_act(x + h)
+        if f"l{i}_xattn" in bp:
+            h = L.rmsnorm(bp[f"l{i}_lnx"], x, cfg.norm_eps)
+            xp = bp[f"l{i}_xattn"]
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, xp["wk"])
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, xp["wv"])
+            new_cache[f"l{i}_xkv"] = {"k": xk.astype(x.dtype), "v": xv.astype(x.dtype)}
+            h = L.attention(xp, h, cfg, "cross", enc_out=enc_out)
+            x = x + h
+        if f"l{i}_ffn" in bp or f"l{i}_moe" in bp:
+            h = L.rmsnorm(bp[f"l{i}_ln2"], x, cfg.norm_eps)
+            if f"l{i}_moe" in bp:
+                h = L.moe(bp[f"l{i}_moe"], h, cfg)
+            else:
+                h = L.ffn(bp[f"l{i}_ffn"], h, cfg)
+            if cfg.post_norms:
+                h = L.rmsnorm(bp[f"l{i}_pn2"], h, cfg.norm_eps)
+            x = x + h
+    return x, new_cache
+
+
+def stack_prefill(groups, caches, x, cfg: ModelConfig, positions=None,
+                  enc_out=None):
+    new_caches = []
+    for gp, cache, (kinds, repeats) in zip(groups, caches, layer_groups(cfg)):
+        body = functools.partial(
+            _block_prefill, cfg=cfg, kinds=kinds, positions=positions,
+            enc_out=enc_out,
+        )
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers and repeats > 1:
+            def scan_body(carry, inp):
+                bp, c = inp
+                y, nc = body(bp, c, carry)
+                return y, nc
+
+            x, nc = jax.lax.scan(scan_body, x, (gp, cache))
+            new_caches.append(nc)
+        else:
+            ncs = []
+            for r in range(repeats):
+                bp = jax.tree.map(lambda a: a[r], gp)
+                c = jax.tree.map(lambda a: a[r], cache)
+                x, nc = body(bp, c, x)
+                ncs.append(nc)
+            new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    return x, new_caches

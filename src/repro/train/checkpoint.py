@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, elastic restore.
+
+Layout:  <dir>/step_<N>/  {manifest.json, <leaf-id>.npy ...}
+
+* **Atomic**: written to ``step_<N>.tmp-<pid>`` then os.rename'd — a crash
+  mid-write never leaves a readable-but-corrupt checkpoint directory.
+* **Async**: arrays are device_get'd synchronously (cheap host copy), file
+  IO happens on a daemon thread; ``wait()`` joins before the next save.
+* **Keep-N**: oldest complete checkpoints beyond ``keep`` are deleted.
+* **Elastic**: leaves are stored UNSHARDED (logical arrays), so a restore
+  may apply ANY new mesh/sharding — checkpoints are mesh-shape-agnostic
+  (restore_with_shardings re-device_puts under the new rules).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "save_pytree", "load_pytree", "latest_step"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(tree, path: str):
+    """Synchronous atomic save of one pytree to ``path`` (a directory)."""
+    leaves, treedef = _flatten(tree)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"treedef": str(treedef), "num_leaves": len(leaves), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+        manifest["leaves"].append(
+            {"i": i, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)  # atomic publish
+
+
+def load_pytree(path: str, like):
+    """Restore into the structure of ``like`` (names/ordering must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like)
+    assert manifest["num_leaves"] == len(leaves), "structure mismatch"
+    out = [np.load(os.path.join(path, f"leaf_{i}.npy")) for i in range(len(leaves))]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp") and "tmp-" not in d:
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, blocking: bool = False):
+        """Host-copies now; writes on a background thread."""
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        host_tree = jax.tree_util.tree_unflatten(treedef, host_leaves)
+        path = os.path.join(self.directory, f"step_{step}")
+
+        def work():
+            save_pytree(host_tree, path)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def restore_latest(self, like, shardings=None):
+        """Returns (tree, step) or (None, None).  With ``shardings`` (a pytree
+        of jax.sharding.Sharding) leaves are device_put under the NEW mesh —
+        the elastic-rescale path."""
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        tree = load_pytree(os.path.join(self.directory, f"step_{step}"), like)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree, step
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and "tmp" not in d
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,184 @@
+"""Optimizers in plain JAX: AdamW, Adafactor, SGD-momentum.
+
+Each optimizer is (init_fn, update_fn) over arbitrary pytrees:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Adafactor implements factored second moments (Shazeer & Stern 2018) so the
+405B-class configs keep optimizer bytes sublinear in the largest matrices —
+the state for an (n, m) matrix is an (n,) row factor + (m,) column factor.
+ZeRO-1 sharding of the state is applied at the sharding-rule layer
+(dist/sharding.py), not here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgdm", "apply_updates", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ----------------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------------
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def lr_at(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], gf)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_at(step)
+
+        def upd(m_, v_, p):
+            u = -(lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum by default)
+# ----------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor(
+    lr: float | Callable[[jax.Array], jax.Array],
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    def lr_at(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    def init_leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(init_leaf, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_at(step)
+
+        def upd(g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)[..., None]
+                prec = (vr[..., None] * vc[..., None, :]) / jnp.maximum(denom, eps)
+                u = g / jnp.sqrt(jnp.maximum(prec, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, new_s
+
+        flat_u, flat_s = [], []
+        leaves, treedef = jax.tree.flatten(params)
+        gleaves = treedef.flatten_up_to(grads)
+        sleaves = treedef.flatten_up_to(state["v"])
+        for g, s in zip(gleaves, sleaves):
+            u, ns = upd(g, s)
+            flat_u.append(u)
+            flat_s.append(ns)
+        updates = jax.tree.unflatten(treedef, flat_u)
+        new_v = jax.tree.unflatten(treedef, flat_s)
+        return updates, {"step": step, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------------------
+# SGD with momentum
+# ----------------------------------------------------------------------------
+
+
+def sgdm(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        del params
+        m = jax.tree.map(
+            lambda m_, g: momentum * m_ + g.astype(jnp.float32), state["m"], grads
+        )
+        updates = jax.tree.map(lambda m_: -lr * m_, m)
+        return updates, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)

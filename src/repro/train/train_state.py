@@ -1,0 +1,121 @@
+"""TrainState pytree + builders for the sharded train step."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import init_params, loss_fn
+from .optimizer import Optimizer, adafactor, adamw, apply_updates, clip_by_global_norm, sgdm
+
+Params = Any
+
+
+def make_optimizer(cfg: ModelConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.learning_rate, weight_decay=0.1)
+    if cfg.optimizer == "adafactor":
+        return adafactor(cfg.learning_rate)
+    if cfg.optimizer == "sgdm":
+        return sgdm(cfg.learning_rate)
+    raise ValueError(cfg.optimizer)
+
+
+def init_state(key, cfg: ModelConfig):
+    params = init_params(key, cfg)
+    opt = make_optimizer(cfg)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "good_steps": jnp.zeros((), jnp.int32),   # NaN-guard accounting
+        "skipped_steps": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ModelConfig, grad_clip: float = 1.0,
+                    microbatch_spec=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    * gradient accumulation over cfg.microbatch microbatches (lax.scan so the
+      HLO stays one microbatch body — the accumulation loop IS the remat
+      boundary for the 405B-class memory footprint);
+    * global-norm clipping;
+    * NaN/Inf step rejection (fault tolerance: a poisoned batch must not
+      corrupt the weights — the update is skipped and counted).
+    """
+    opt = make_optimizer(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch, cfg)
+
+    def _constrain_mb(xs):
+        """Keep the per-microbatch batch dim sharded over (pod, data).
+
+        Without this, reshaping (B, S) -> (mb, B/mb, S) with mb smaller than
+        the data axis makes XLA replicate each microbatch across data shards
+        (measured 16x compute waste on qwen/phi3 train — EXPERIMENTS.md §Perf).
+        The caller (launch/dryrun, launch/train) passes the NamedSharding or
+        PartitionSpec for the reshaped (mb, B/mb, ...) layout.
+        """
+        if microbatch_spec is None:
+            return xs
+        return jax.lax.with_sharding_constraint(xs, microbatch_spec)
+
+    def train_step(state, batch):
+        params = state["params"]
+        mb = max(1, cfg.microbatch)
+        if mb > 1:
+            def split(x):
+                b = x.shape[0]
+                xs = x.reshape((mb, b // mb) + x.shape[1:])
+                return _constrain_mb(xs)
+
+            mbatches = jax.tree.map(split, batch)
+
+            def body(acc, mbatch):
+                loss, grads = grads_of(params, mbatch)
+                acc_loss, acc_grads = acc
+                return (
+                    acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_grads, grads),
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, grad_sum), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), mbatches
+            )
+            loss = loss_sum / mb
+            grads = jax.tree.map(lambda g: g / mb, grad_sum)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, new_opt = opt.update(grads, state["opt"], params)
+
+        ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+
+        def guarded(u):
+            return jnp.where(ok, u, jnp.zeros_like(u))
+
+        new_params = apply_updates(params, jax.tree.map(guarded, updates))
+        new_opt = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_opt, state["opt"]
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+            "good_steps": state["good_steps"] + ok.astype(jnp.int32),
+            "skipped_steps": state["skipped_steps"] + (~ok).astype(jnp.int32),
+        }
+        metrics = {"loss": loss, "grad_norm": gnorm, "ok": ok}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,128 @@
+"""ASP-KAN-HAQ: the paper's alignment/symmetry/powergap invariants."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.asp_quant import (
+    ASPQuantSpec,
+    build_lut,
+    dense_basis_from_codes,
+    hemi_fold,
+    hemi_unfold,
+    lookup_active,
+    max_ld,
+    pact_basis_tables,
+    pact_dense_basis,
+    quantize_input,
+    quantized_dense_basis,
+)
+from repro.core.bspline import bspline_basis
+
+
+def test_max_ld_law():
+    # eq (6): G * 2**LD <= 2**n, LD maximal
+    assert max_ld(5, 8) == 5      # 5*32=160 <= 256 < 5*64
+    assert max_ld(8, 8) == 5      # 8*32=256 <= 256
+    assert max_ld(68, 8) == 1
+    assert max_ld(68, 10) == 3
+    assert max_ld(257, 8) == -1   # unsatisfiable
+
+
+@settings(max_examples=60, deadline=None)
+@given(g=st.integers(1, 128), n=st.integers(4, 12))
+def test_max_ld_is_maximal_and_feasible(g, n):
+    ld = max_ld(g, n)
+    if ld < 0:
+        assert g > 2**n
+    else:
+        assert g * 2**ld <= 2**n
+        assert g * 2 ** (ld + 1) > 2**n
+
+
+@pytest.mark.parametrize("g,n", [(5, 8), (8, 8), (16, 8), (64, 8), (68, 10), (3, 6)])
+def test_alignment_shared_lut_equals_float_basis(g, n):
+    """THE alignment property: on-grid inputs, the single shared LUT
+    reproduces every B_i exactly (up to LUT value quantization)."""
+    spec = ASPQuantSpec(grid_size=g, order=3, n_bits=n, lut_bits=16, lo=-1.0, hi=1.0)
+    e = build_lut(spec)
+    lut = jnp.asarray(e["lut_q"] * e["scale"], jnp.float32)
+    codes = jnp.arange(spec.num_codes, dtype=jnp.int32)
+    dense = dense_basis_from_codes(codes, lut, spec)
+    x = spec.lo + codes.astype(jnp.float32) * spec.code_step
+    ref = bspline_basis(x, spec.lo, spec.hi, g, 3)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(ref), atol=3e-4)
+
+
+def test_hemi_fold_halves_storage_and_roundtrips():
+    for g in [5, 8, 16]:
+        spec = ASPQuantSpec(grid_size=g, order=3, n_bits=8, lo=0.0, hi=1.0)
+        e = build_lut(spec)
+        total = (spec.order + 1) * spec.codes_per_interval
+        assert len(e["hemi"]) == total // 2 + 1  # ~50% of the full table
+        flat = hemi_unfold(e["hemi"], spec)
+        refolded = hemi_fold(
+            np.stack(
+                [flat[(spec.order - d) * spec.codes_per_interval:
+                      (spec.order - d + 1) * spec.codes_per_interval]
+                 for d in range(spec.order + 1)], axis=1),
+            spec,
+        )
+        np.testing.assert_array_equal(refolded, e["hemi"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    g=st.integers(2, 40),
+    order=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quantized_basis_close_to_float(g, order, seed):
+    try:
+        spec = ASPQuantSpec(grid_size=g, order=order, n_bits=10, lo=-1.0, hi=1.0)
+    except ValueError:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=128), jnp.float32)
+    qb = np.asarray(quantized_dense_basis(x, spec))
+    fb = np.asarray(bspline_basis(x, -1.0, 1.0, g, order))
+    # error bounded by input-quantization step (Lipschitz const of bump < 2/h_code)
+    assert np.abs(qb - fb).max() < 2.5 * spec.code_step / spec.knot_step + 1e-2
+
+
+def test_powergap_bit_split_consistency():
+    spec = ASPQuantSpec(grid_size=8, order=3, n_bits=8, lo=0.0, hi=1.0)
+    e = build_lut(spec)
+    lut = jnp.asarray(e["lut"], jnp.float32)
+    codes = jnp.arange(spec.num_codes, dtype=jnp.int32)
+    g_idx, vals = lookup_active(codes, lut, spec)
+    # global bits = interval index, exactly floor(x / knot_step)
+    x = np.asarray(codes) * spec.code_step
+    np.testing.assert_array_equal(
+        np.asarray(g_idx), np.floor(x / spec.knot_step).astype(np.int32)
+    )
+    assert vals.shape == (spec.num_codes, spec.order + 1)
+
+
+def test_pact_baseline_needs_distinct_tables():
+    """Misaligned grids: every B_i's code->value table is distinct (the
+    motivation for per-B_i LUTs in the conventional design)."""
+    spec = ASPQuantSpec(grid_size=5, order=3, n_bits=8, lo=0.0, hi=1.0)
+    tables = pact_basis_tables(spec)
+    assert len({tables[i].tobytes() for i in range(spec.num_basis)}) == spec.num_basis
+    x = jnp.linspace(0.0, 1.0, 97)
+    pb = np.asarray(pact_dense_basis(x, spec, tables))
+    fb = np.asarray(bspline_basis(x, 0.0, 1.0, 5, 3))
+    assert np.abs(pb - fb).max() < 0.02  # baseline is accurate, just costly
+
+
+def test_signed_variant_affine_map():
+    spec = ASPQuantSpec(grid_size=5, order=3, n_bits=8, lo=-1.0, hi=1.0, signed=True)
+    x = jnp.asarray([-1.0, 0.0, 1.0 - 1e-6])
+    codes = np.asarray(quantize_input(x, spec))
+    assert codes[0] == 0 and codes[-1] == spec.num_codes - 1
+    assert codes[1] == spec.num_codes // 2

@@ -1,0 +1,57 @@
+"""Unit + property tests for the uniform B-spline reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bspline import bspline_basis, cardinal_bump, num_basis
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+@pytest.mark.parametrize("grid", [1, 3, 5, 16])
+def test_partition_of_unity(order, grid):
+    x = jnp.linspace(0.0, 1.0, 257)
+    b = bspline_basis(x, 0.0, 1.0, grid, order)
+    assert b.shape == (257, grid + order)
+    np.testing.assert_allclose(np.asarray(b.sum(-1)), 1.0, atol=1e-5)
+    assert (np.asarray(b) >= -1e-6).all()
+
+
+@pytest.mark.parametrize("order", [2, 3, 4])
+def test_shifted_copies_of_cardinal_bump(order):
+    """Uniform knots => B_i(x) = b_K(x/h - i + K): the ASP-shareability fact."""
+    g, lo, hi = 7, -2.0, 3.0
+    h = (hi - lo) / g
+    x = np.linspace(lo, hi - 1e-6, 301)
+    b = np.asarray(bspline_basis(jnp.asarray(x, jnp.float32), lo, hi, g, order))
+    for i in range(num_basis(g, order)):
+        expect = cardinal_bump((x - lo) / h - i + order, order)
+        np.testing.assert_allclose(b[:, i], expect, atol=2e-5)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4, 5])
+def test_cardinal_bump_symmetry_and_support(order):
+    t = np.linspace(-1.0, order + 2.0, 501)
+    v = cardinal_bump(t, order)
+    np.testing.assert_allclose(v, cardinal_bump(order + 1 - t, order), atol=1e-12)
+    assert (v[(t < 0) | (t > order + 1)] == 0).all()
+    # integrates to 1 (B-splines are densities)
+    tt = np.linspace(0, order + 1, 20001)
+    assert abs(np.trapezoid(cardinal_bump(tt, order), tt) - 1.0) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    grid=st.integers(1, 32),
+    order=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_pou_and_local_support(grid, order, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=64), jnp.float32)
+    b = np.asarray(bspline_basis(x, -1.0, 1.0, grid, order))
+    np.testing.assert_allclose(b.sum(-1), 1.0, atol=1e-4)
+    # at most order+1 non-zero bases anywhere (local support)
+    assert (np.count_nonzero(b > 1e-7, axis=-1) <= order + 1).all()

@@ -1,0 +1,101 @@
+"""Fault-tolerance substrate: checkpoint atomicity/rotation/restore,
+data-pipeline determinism and seekability."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.lm_data import DataConfig, global_batch_at_step, host_batch_at_step
+from repro.train.checkpoint import Checkpointer, latest_step, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(5), "c": jnp.float32(3.5)},
+    }
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    p = str(tmp_path / "ckpt")
+    save_pytree(t, p)
+    t2 = load_pytree(p, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_no_partial_dir_visible(tmp_path):
+    """A tmp dir from a crashed writer must not count as a checkpoint."""
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_5.tmp-1234"))
+    assert latest_step(d) is None
+    ck = Checkpointer(d, keep=2)
+    ck.save(7, _tree(), blocking=True)
+    assert latest_step(d) == 7
+
+
+def test_keep_n_rotation(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in [10, 20, 30, 40]:
+        ck.save(s, _tree(s), blocking=True)
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(tmp_path) if d.startswith("step_")
+    )
+    assert steps == [30, 40]
+
+
+def test_restore_latest_and_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    t = _tree(1)
+    ck.save(3, t)          # async
+    ck.wait()
+    restored, step = ck.restore_latest(t)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_elastic_restore_with_new_sharding(tmp_path):
+    """Checkpoints are mesh-agnostic: restore under a different sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(str(tmp_path), keep=1)
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, t, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = ck.restore_latest(t, shardings=sh)
+    assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    b1 = global_batch_at_step(cfg, 17)
+    b2 = global_batch_at_step(cfg, 17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = global_batch_at_step(cfg, 18)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # shapes + shifted targets
+    assert b1["tokens"].shape == (8, 64)
+    assert (b1["tokens"] < 1000).all() and (b1["tokens"] >= 0).all()
+
+
+def test_data_host_sharding_shapes():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8)
+    h0 = host_batch_at_step(cfg, 5, host_id=0, num_hosts=4)
+    h1 = host_batch_at_step(cfg, 5, host_id=1, num_hosts=4)
+    assert h0["tokens"].shape == (2, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])  # distinct shards
+    # determinism per host
+    np.testing.assert_array_equal(
+        h0["tokens"], host_batch_at_step(cfg, 5, 0, 4)["tokens"]
+    )

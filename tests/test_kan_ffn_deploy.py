@@ -1,0 +1,38 @@
+"""LM KAN-FFN deployment path: ASP quantization + Pallas kernel must match
+the float FFN within int8 tolerance (the paper's technique at LM width)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.core.kan_ffn_deploy import kan_ffn_apply_quantized, quantize_kan_ffn
+from repro.models import layers as L
+
+
+def test_quantized_kan_ffn_matches_float():
+    cfg = smoke_config("qwen2.5-14b").kan_variant(grid=8)
+    key = jax.random.PRNGKey(0)
+    p = L.init_ffn(key, cfg)
+    x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.float32) * 0.5
+
+    y_float = L.ffn(p, x, cfg)
+    qffn = quantize_kan_ffn(p, cfg)
+    y_q = kan_ffn_apply_quantized(qffn, x, cfg, interpret=True)
+
+    assert y_q.shape == y_float.shape
+    err = float(jnp.abs(y_float - y_q).max())
+    scale = float(jnp.abs(y_float).max())
+    assert err < 0.06 * scale + 0.02, (err, scale)
+
+
+def test_quantized_kan_ffn_storage_is_int8_plus_hemi_lut():
+    cfg = smoke_config("qwen2.5-14b").kan_variant(grid=8)
+    p = L.init_ffn(jax.random.PRNGKey(1), cfg)
+    qffn = quantize_kan_ffn(p, cfg)
+    for half in ("l1", "l2"):
+        assert qffn[half]["c_q"].dtype == jnp.int8
+        assert qffn[half]["w_b_q"].dtype == jnp.int8
+        spec = L.kan_ffn_spec(cfg)
+        total = (spec.order + 1) * spec.codes_per_interval
+        assert len(qffn[half]["hemi"]) == total // 2 + 1  # SH-LUT: half stored

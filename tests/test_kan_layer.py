@@ -1,0 +1,83 @@
+"""KAN layer: float/quantized agreement, grid extension, param accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asp_quant import ASPQuantSpec
+from repro.core.kan_layer import (
+    KANSpec,
+    extend_layer_grid,
+    init_kan_layer,
+    init_kan_network,
+    kan_layer_apply,
+    kan_layer_apply_quantized,
+    kan_network_apply,
+    param_count,
+    quantize_kan_layer,
+)
+
+
+def test_param_count_matches_paper():
+    assert param_count(KANSpec(dims=(17, 1, 14), grid_size=5)) == 279    # KAN1
+    assert param_count(KANSpec(dims=(17, 1, 14), grid_size=68)) == 2232  # KAN2
+
+
+@pytest.mark.parametrize("g", [5, 16])
+def test_quantized_path_close_to_float(g):
+    kspec = KANSpec(dims=(17, 1, 14), grid_size=g)
+    spec = kspec.layer_spec()
+    key = jax.random.PRNGKey(0)
+    params = init_kan_network(key, kspec)
+    x = jax.random.uniform(key, (64, 17), minval=-1, maxval=1)
+    y = kan_network_apply(params, x, kspec)
+    qp = [quantize_kan_layer(p, spec) for p in params]
+    yq = kan_network_apply(None, x, kspec, quantized=True, qparams_list=qp)
+    assert jnp.isfinite(y).all() and jnp.isfinite(yq).all()
+    # 8-bit path: bounded absolute error relative to the output scale
+    err = float(jnp.abs(y - yq).max())
+    scale = float(jnp.abs(y).max())
+    assert err < 0.05 * scale + 0.02, (err, scale)
+
+
+def test_grid_extension_preserves_function():
+    spec = ASPQuantSpec(grid_size=5, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    key = jax.random.PRNGKey(1)
+    p = init_kan_layer(key, 9, 4, spec)
+    p2 = extend_layer_grid(p, spec, 20)
+    spec20 = dataclasses.replace(spec, grid_size=20)
+    x = jnp.linspace(-1, 1, 161)[:, None] * jnp.ones((1, 9))
+    y1 = kan_layer_apply(p, x, spec)
+    y2 = kan_layer_apply(p2, x, spec20)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    assert p2["c"].shape == (9, 23, 4)
+
+
+def test_gradients_flow():
+    kspec = KANSpec(dims=(5, 3, 2), grid_size=4)
+    key = jax.random.PRNGKey(2)
+    params = init_kan_network(key, kspec)
+    x = jax.random.uniform(key, (8, 5), minval=-1, maxval=1)
+
+    def loss(params):
+        return jnp.sum(kan_network_apply(params, x, kspec) ** 2)
+
+    grads = jax.grad(loss)(params)
+    norms = [float(jnp.abs(g).max()) for p in grads for g in p.values()]
+    assert all(np.isfinite(norms)) and max(norms) > 0
+
+
+def test_relu_residual_branch_matches_paper_eq1():
+    """phi(x) = w_b * relu(x) + spline(x): zero spline coeffs -> pure ReLU."""
+    spec = ASPQuantSpec(grid_size=5, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    key = jax.random.PRNGKey(3)
+    p = init_kan_layer(key, 4, 3, spec)
+    p = {"c": jnp.zeros_like(p["c"]), "w_b": p["w_b"]}
+    x = jax.random.uniform(key, (16, 4), minval=-1, maxval=1)
+    y = kan_layer_apply(p, x, spec)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jax.nn.relu(x) @ p["w_b"]), atol=1e-6
+    )

@@ -1,0 +1,104 @@
+"""Pallas kan_spline kernel vs pure-jnp oracle: shape/dtype/grid sweeps.
+
+Kernels run in interpret mode (CPU container); the BlockSpec tiling is the
+TPU contract being validated.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.asp_quant import ASPQuantSpec, build_lut, quantize_input
+from repro.core.kan_layer import KANSpec, init_kan_network, quantize_kan_layer, kan_network_apply
+from repro.kernels.kan_spline.ops import kan_spline, kan_spline_from_qparams
+from repro.kernels.kan_spline.ref import kan_spline_ref
+
+
+def _setup(B, F, O, G, order=3, n_bits=8, seed=0, wdtype=jnp.float32):
+    spec = ASPQuantSpec(grid_size=G, order=order, n_bits=n_bits, lo=-1.0, hi=1.0)
+    e = build_lut(spec)
+    lut = jnp.asarray(e["lut_q"] * e["scale"], jnp.float32)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    codes = jax.random.randint(k1, (B, F), 0, spec.num_codes)
+    wc = (jax.random.normal(k2, (F, spec.num_basis, O)) * 0.3).astype(wdtype)
+    wb = (jax.random.normal(k3, (F, O)) * 0.3).astype(wdtype)
+    return spec, lut, codes, wc, wb
+
+
+SHAPES = [
+    (32, 17, 14, 5),     # the paper's edge KAN layer
+    (8, 3, 5, 8),        # tiny, heavy padding
+    (130, 300, 200, 16), # multi-tile all axes
+    (256, 128, 128, 4),  # exact tiles
+    (1, 1, 1, 64),       # degenerate
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_kan_spline_matches_ref(shape):
+    B, F, O, G = shape
+    spec, lut, codes, wc, wb = _setup(B, F, O, G)
+    ref = kan_spline_ref(codes, lut, wc, wb, spec)
+    out = kan_spline(codes, lut, wc, wb, spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+def test_kan_spline_dtypes(wdtype):
+    spec, lut, codes, wc, wb = _setup(64, 32, 48, 8, wdtype=wdtype)
+    ref = kan_spline_ref(codes, lut, wc, wb, spec)
+    out = kan_spline(codes, lut, wc, wb, spec, interpret=True)
+    tol = 5e-2 if wdtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+def test_kan_spline_orders(order):
+    spec, lut, codes, wc, wb = _setup(16, 8, 8, 6, order=order)
+    ref = kan_spline_ref(codes, lut, wc, wb, spec)
+    out = kan_spline(codes, lut, wc, wb, spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(8, 128, 8), (16, 256, 16), (64, 128, 32)])
+def test_kan_spline_block_shapes(blocks):
+    bb, bo, bf = blocks
+    spec, lut, codes, wc, wb = _setup(48, 40, 200, 8)
+    ref = kan_spline_ref(codes, lut, wc, wb, spec)
+    out = kan_spline(codes, lut, wc, wb, spec,
+                     block_b=bb, block_o=bo, block_f=bf, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    f=st.integers(1, 48),
+    o=st.integers(1, 40),
+    g=st.sampled_from([4, 5, 8, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_kan_spline_property_random_shapes(b, f, o, g, seed):
+    spec, lut, codes, wc, wb = _setup(b, f, o, g, seed=seed)
+    ref = kan_spline_ref(codes, lut, wc, wb, spec)
+    out = kan_spline(codes, lut, wc, wb, spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4, rtol=1e-3)
+
+
+def test_kernel_equals_quantized_layer_path():
+    """End-to-end: kernel == kan_layer_apply_quantized on a real layer."""
+    kspec = KANSpec(dims=(17, 14), grid_size=5)
+    spec = kspec.layer_spec()
+    key = jax.random.PRNGKey(0)
+    params = init_kan_network(key, kspec)
+    qp = quantize_kan_layer(params[0], spec)
+    x = jax.random.uniform(key, (33, 17), minval=-1, maxval=1)
+    codes = quantize_input(x, spec)
+    out_kernel = kan_spline_from_qparams(codes, qp, spec, interpret=True)
+    out_layer = kan_network_apply(None, x, kspec, quantized=True, qparams_list=[qp])
+    np.testing.assert_allclose(
+        np.asarray(out_kernel), np.asarray(out_layer), atol=2e-4, rtol=1e-4
+    )

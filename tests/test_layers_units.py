@@ -1,0 +1,142 @@
+"""Layer-level unit tests: SSD chunked == naive recurrence, RG-LRU scan ==
+step-by-step, MoE dispatch properties, chunked attention == direct, RoPE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.models import layers as L
+
+
+def test_ssd_chunked_equals_naive_recurrence():
+    """The SSD chunked algorithm must equal the sequential SSM recurrence."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, N = 2, 32, 3, 4, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.3
+    b = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    c = jax.random.normal(ks[4], (B, S, N)) * 0.5
+
+    for chunk in (4, 8, 16, 32):
+        y, final = L._ssd_chunked(x, dt, a_log, b, c, chunk)
+        # naive: h_t = exp(dt*A) h_{t-1} + dt*x_t b_t^T ; y_t = c_t . h_t
+        a = -jnp.exp(a_log)
+        h = jnp.zeros((B, H, N, P))
+        ys = []
+        for t in range(S):
+            da = jnp.exp(dt[:, t] * a)  # (B,H)
+            h = h * da[..., None, None] + jnp.einsum(
+                "bn,bhp->bhnp", b[:, t], x[:, t] * dt[:, t][..., None])
+            ys.append(jnp.einsum("bn,bhnp->bhp", c[:, t], h))
+        y_naive = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_naive),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(final), np.asarray(h),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_equals_stepwise():
+    cfg = smoke_config("recurrentgemma-9b")
+    key = jax.random.PRNGKey(1)
+    p = L.init_rglru(key, cfg)
+    x = jax.random.normal(key, (2, 12, cfg.d_model), jnp.float32) * 0.3
+    y_full, state_f = L.rglru_prefill(p, x, cfg)
+    # step-by-step decode from zero state
+    st = L.init_rglru_state(cfg, 2)
+    outs = []
+    for t in range(12):
+        y, st = L.rglru(p, x[:, t:t + 1], cfg, state=st)
+        outs.append(y)
+    y_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state_f["h"]), np.asarray(st["h"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routes_to_topk_and_respects_capacity():
+    cfg = dataclasses.replace(smoke_config("olmoe-1b-7b"),
+                              moe_capacity_factor=16.0)
+    key = jax.random.PRNGKey(2)
+    p = L.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.float32)
+    out = L.moe(p, x, cfg)
+    assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+    # with huge capacity, output must equal the dense (loop) reference
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]
+    topv, topi = jax.lax.top_k(logits, cfg.num_experts_per_tok)
+    gates = jax.nn.softmax(topv, axis=-1)
+    xt = x.reshape(-1, cfg.d_model)
+    ref = jnp.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        acc = jnp.zeros((cfg.d_model,))
+        for j in range(cfg.num_experts_per_tok):
+            e = int(topi[t, j])
+            h = jax.nn.silu(xt[t] @ p["wg"][e]) * (xt[t] @ p["wi"][e])
+            acc = acc + gates[t, j] * (h @ p["wo"][e])
+        ref = ref.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_equals_direct():
+    cfg = smoke_config("qwen2.5-14b")
+    key = jax.random.PRNGKey(3)
+    B, S, Hq, Hkv, D = 2, 4096, 4, 2, 16  # S multiple of chunk -> scan path
+    q = jax.random.normal(key, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.float32)
+    out_scan = L._sdpa(q, k, v, cfg, "global")
+    # direct single-chunk path via temporarily large chunk
+    orig = L.ATTN_CHUNK
+    try:
+        L.ATTN_CHUNK = 10**9
+        out_direct = L._sdpa(q, k, v, cfg, "global")
+    finally:
+        L.ATTN_CHUNK = orig
+    np.testing.assert_allclose(np.asarray(out_scan), np.asarray(out_direct),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_local_attention_window_semantics():
+    cfg = dataclasses.replace(smoke_config("mixtral-8x7b"), window_size=4)
+    key = jax.random.PRNGKey(4)
+    B, S, H, D = 1, 10, 2, 8
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(key, (B, S, H, D))
+    v = jax.random.normal(key, (B, S, H, D))
+    out = L._sdpa(q, k, v, cfg, "local")
+    # position 9 must not attend to position <= 5: zeroing those k/v rows
+    k2 = k.at[:, :6].set(100.0)
+    v2 = v.at[:, :6].set(100.0)
+    out2 = L._sdpa(q, k2, v2, cfg, "local")
+    np.testing.assert_allclose(np.asarray(out[:, 9]), np.asarray(out2[:, 9]),
+                               rtol=1e-5)
+    # but position 5 WOULD see them
+    assert not np.allclose(np.asarray(out[:, 5]), np.asarray(out2[:, 5]))
+
+
+def test_rope_rotation_invariance():
+    """RoPE: dot(q_m, k_n) depends only on (m - n)."""
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, 16))
+    def dot_at(m, n):
+        qm = L.rope(q, jnp.array([[m]]), 10000.0)
+        kn = L.rope(k, jnp.array([[n]]), 10000.0)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-3
+
+
+def test_softcap():
+    x = jnp.asarray([-100.0, 0.0, 100.0])
+    y = L.softcap(x, 30.0)
+    assert float(jnp.abs(y).max()) <= 30.0
+    np.testing.assert_allclose(np.asarray(L.softcap(x, 0.0)), np.asarray(x))

@@ -1,0 +1,118 @@
+"""Correctness of the §Perf optimizations: head padding, fast basis,
+custom KAN-FFN VJP — each must be a pure layout/schedule change."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.core.bspline import bspline_basis, bspline_basis_fast
+from repro.models import layers as L
+from repro.models.model import decode_step, forward, init_params, prefill
+
+
+@pytest.mark.parametrize("gk", [(5, 3), (8, 3), (16, 2), (4, 1), (68, 3)])
+def test_fast_basis_equals_cox_de_boor(gk):
+    g, k = gk
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, 257), jnp.float32)
+    a = bspline_basis(x, -1.0, 1.0, g, k)
+    b = bspline_basis_fast(x, -1.0, 1.0, g, k)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_head_padding_preserves_function_at_init():
+    """Padded physical heads must not change logits (zero wo rows)."""
+    cfg0 = smoke_config("qwen2.5-14b")
+    cfg1 = dataclasses.replace(cfg0, head_pad_multiple=8)  # 4 -> 8 heads
+    assert cfg1.phys_heads == 8 and cfg0.phys_heads == 4
+    key = jax.random.PRNGKey(0)
+    p1 = init_params(key, cfg1)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg0.vocab_size)}
+    out1 = forward(p1, batch, cfg1)
+    # zeroing the padded q/wo slots by hand must give the same output
+    def zero_pad(leaf_path_ok):
+        pass
+    # the padded wo rows are zero at init => the extra heads contribute 0.
+    # verify by also zeroing their wq columns (must be a no-op):
+    def zero_extra_wq(d):
+        if isinstance(d, dict):
+            return {k: zero_extra_wq(v) for k, v in d.items()}
+        return d
+    p2 = jax.tree_util.tree_map_with_path(
+        lambda kp, x: x.at[..., cfg0.num_heads:, :].set(0.0)
+        if "wq" in "/".join(str(getattr(k, "key", k)) for k in kp)
+        and x.ndim >= 3 and x.shape[-2] == 8 else x,
+        p1,
+    )
+    out2 = forward(p2, batch, cfg1)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_heads_serving_consistency():
+    cfg = dataclasses.replace(smoke_config("qwen2.5-14b"), head_pad_multiple=8)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    b, s = 2, 20
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    full = forward(params, batch, cfg)
+    _, cache = prefill(params, {"tokens": batch["tokens"][:, :s - 1]}, cfg,
+                       max_len=s + 4)
+    logits, _ = decode_step(params, cache, batch["tokens"][:, s - 1],
+                            jnp.full((b,), s - 1, jnp.int32), cfg)
+    scale = float(jnp.abs(full).max())
+    assert float(jnp.abs(logits - full[:, s - 1]).max()) < 2e-3 * scale + 1e-4
+
+
+def test_kan_ffn_custom_vjp_matches_autodiff():
+    cfg = smoke_config("qwen2.5-14b").kan_variant(grid=8)
+    key = jax.random.PRNGKey(0)
+    p = L.init_ffn(key, cfg)
+    x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.float32) * 0.5
+    spec = L.kan_ffn_spec(cfg)
+    hgk = (spec.hi, spec.grid_size, spec.order)
+
+    def f_custom(c, x):
+        return jnp.sum(L._spline_mm(x, c, spec.lo, hgk, "t") ** 2)
+
+    def f_ref(c, x):
+        basis = bspline_basis_fast(jnp.tanh(x.astype(jnp.float32)),
+                                   spec.lo, spec.hi, spec.grid_size, spec.order)
+        return jnp.sum(jnp.einsum("bsfn,fno->bso", basis.astype(c.dtype), c) ** 2)
+
+    gc1, gx1 = jax.grad(f_custom, argnums=(0, 1))(p["c1"], x)
+    gc2, gx2 = jax.grad(f_ref, argnums=(0, 1))(p["c1"], x)
+    np.testing.assert_allclose(np.asarray(gc1), np.asarray(gc2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kan_ffn_forward_finite_and_trains():
+    cfg = smoke_config("qwen2.5-14b").kan_variant(grid=8)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (2, 16), 0, cfg.vocab_size),
+    }
+    from repro.models.model import loss_fn
+    from repro.train.optimizer import adamw, apply_updates
+
+    opt = adamw(3e-3)
+    st = opt.init(params)
+
+    @jax.jit
+    def step(params, st):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        u, st = opt.update(grads, st, params)
+        return apply_updates(params, u), st, loss
+
+    losses = []
+    for _ in range(3):
+        params, st, loss = step(params, st)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0]

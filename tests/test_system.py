@@ -1,0 +1,140 @@
+"""End-to-end system behaviour tests for the paper's pipeline."""
+
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cim import CIMConfig
+from repro.core.kan_layer import KANSpec
+from repro.core.neurosim import (
+    evaluate_accuracy,
+    evaluate_accuracy_cim,
+    train_kan,
+)
+from repro.data.knot import make_knot_dataset
+
+
+@pytest.fixture(scope="module")
+def trained_kan():
+    xt, yt, xv, yv = make_knot_dataset(4096, 1024, seed=0, label_noise=0.04)
+
+    def sched(step):
+        t = jnp.minimum(step / 150.0, 1.0)
+        return 1.5e-2 * 0.95 * (0.5 * (1 + jnp.cos(jnp.pi * t))) + 1e-3
+
+    kspec = KANSpec(dims=(17, 1, 14), grid_size=8)
+    params, hist = train_kan(kspec, xt, yt, xv, yv, epochs=80,
+                             batch_size=2048, lr=sched)
+    return kspec, params, (xt, yt, xv, yv)
+
+
+def test_kan_learns_knot_task(trained_kan):
+    kspec, params, (xt, yt, xv, yv) = trained_kan
+    acc = evaluate_accuracy(params, xv, yv, kspec)
+    assert acc > 0.55, acc  # far above 1/14 chance
+
+
+def test_quantized_acim_accuracy_close_to_software(trained_kan):
+    kspec, params, (xt, yt, xv, yv) = trained_kan
+    sw = evaluate_accuracy(params, xv, yv, kspec)
+    cim = CIMConfig(array_rows=128, adc_bits=10, ir_gamma=0.03,
+                    sigma_ps_ref=0.05)
+    hw = evaluate_accuracy_cim(params, xv, yv, kspec, cim,
+                               jax.random.PRNGKey(0), use_sam=True,
+                               calib_x=xt[:1024])
+    assert sw - hw < 0.08, (sw, hw)
+
+
+def test_sam_reduces_mac_error_on_trained_model(trained_kan):
+    """KAN-SAM mechanism on the TRAINED model's real spline weights: the
+    deterministic IR-drop MAC error must shrink under the SAM placement.
+    (Accuracy-level protection is validated in benchmarks/fig12 with
+    fully-trained models; the 80-epoch CI fixture is too noisy for a stable
+    accuracy comparison.)"""
+    from repro.core.asp_quant import dense_basis_from_codes, quantize_input
+    from repro.core.cim import cim_matmul, ideal_matmul
+    from repro.core.kan_layer import quantize_kan_layer
+    from repro.core.sam import row_activation_weight, sam_permutation
+
+    kspec, params, (xt, yt, xv, yv) = trained_kan
+    spec = kspec.layer_spec()
+    qp = quantize_kan_layer(params[0], spec)
+    codes = quantize_input(jnp.asarray(xv[:512]), spec)
+    basis = dense_basis_from_codes(codes, qp["lut"], spec)
+    drives = basis.reshape(512, -1) / float(qp["lut_scale"])
+    w_rows = qp["c_q"].astype(jnp.float32).reshape(drives.shape[1], -1)
+    ideal = ideal_matmul(drives, w_rows)
+    cim = CIMConfig(array_rows=512, adc_bits=10, ir_gamma=0.12,
+                    sigma_ps_ref=0.0, deterministic=True)
+    base = cim_matmul(drives, w_rows, cim, jax.random.PRNGKey(0),
+                      x_max=255.0, adc_calibrate=True)
+    rw = row_activation_weight(jnp.asarray(xt[:2048]), spec, 17)
+    sam = cim_matmul(drives, w_rows, cim, jax.random.PRNGKey(0),
+                     row_perm=sam_permutation(rw, cim.array_rows),
+                     x_max=255.0, adc_calibrate=True)
+    err_base = float(jnp.abs(base - ideal).mean())
+    err_sam = float(jnp.abs(sam - ideal).mean())
+    assert err_sam < err_base, (err_sam, err_base)
+
+
+DRYRUN_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.registry import smoke_config
+    from repro.dist import sharding as shd
+    from repro.train.train_state import init_state, make_train_step
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = dataclasses.replace(smoke_config("{arch}"), microbatch=2)
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(lambda: init_state(key, cfg))
+    pspecs = {{
+        "params": shd.param_pspecs(state_shape["params"], mesh),
+        "opt": shd.opt_state_pspecs(state_shape["opt"], state_shape["params"], mesh),
+        "step": P(), "good_steps": P(), "skipped_steps": P(),
+    }}
+    sh = shd.to_shardings(pspecs, mesh)
+    batch = {{
+        "tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+    }}
+    if "whisper" in "{arch}":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (4, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if "pixtral" in "{arch}":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (4, cfg.num_patches, cfg.patch_embed_dim), jnp.float32)
+    bsh = jax.tree.map(
+        lambda s: NamedSharding(mesh, P("data", *([None] * (len(s.shape) - 1)))),
+        batch)
+    with mesh:
+        step = make_train_step(cfg)
+        compiled = jax.jit(step, in_shardings=(sh, bsh),
+                           out_shardings=(sh, None)).lower(state_shape, batch).compile()
+    assert compiled.memory_analysis() is not None
+    print("OK", compiled.cost_analysis()["flops"] > 0)
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "olmoe-1b-7b", "mamba2-370m"])
+def test_dryrun_tiny_mesh_subprocess(arch):
+    """lower+compile on an 8-device fake mesh (separate process so the
+    device-count flag doesn't leak into this test session)."""
+    code = DRYRUN_SNIPPET.format(arch=arch)
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=420, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                          "HOME": "/root"},
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout

@@ -1,0 +1,127 @@
+"""TM-DV-IG / CIM non-ideality / KAN-SAM behavioral properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asp_quant import ASPQuantSpec
+from repro.core.cim import CIMConfig, cim_matmul, ideal_matmul
+from repro.core.sam import (
+    basis_activation_probability,
+    identity_permutation,
+    row_activation_weight,
+    sam_permutation,
+)
+from repro.core.tmdv import (
+    PURE_PWM,
+    PURE_VOLTAGE,
+    TD_A,
+    TD_P,
+    TMDVConfig,
+    apply_input_noise,
+    wl_latency_units,
+)
+
+
+def test_tmdv_noiseless_is_linear_identity():
+    cfg = dataclasses.replace(TD_A(8), sigma_v_ref=0.0, sigma_t=0.0)
+    codes = jnp.arange(256)
+    q = apply_input_noise(codes, cfg, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(q), np.arange(256), atol=1e-5)
+
+
+def test_tmdv_latency_ordering():
+    # pure voltage: 1 slot; TM-DV: 2**N slots; pure PWM: 2**2N slots
+    assert wl_latency_units(PURE_VOLTAGE(8)) == 1
+    assert wl_latency_units(TMDVConfig(8, 4)) == 16
+    assert wl_latency_units(PURE_PWM(8)) == 256
+    assert wl_latency_units(PURE_PWM(8)) // wl_latency_units(TMDVConfig(8, 4)) == 16
+
+
+def test_tda_less_noise_than_tdp():
+    """TD-A (fewer voltage levels) must have lower charge error than TD-P."""
+    key = jax.random.PRNGKey(0)
+    codes = jnp.arange(256).repeat(200)
+    errs = {}
+    for name, cfg in [("a", TD_A(8)), ("p", TD_P(8))]:
+        q = apply_input_noise(codes, cfg, key)
+        errs[name] = float(jnp.abs(q - codes.astype(jnp.float32)).mean())
+    assert errs["a"] < errs["p"]
+
+
+def test_pure_voltage_noisier_than_tmdv():
+    key = jax.random.PRNGKey(1)
+    codes = jnp.arange(256).repeat(200)
+    qv = apply_input_noise(codes, PURE_VOLTAGE(8), key)
+    qt = apply_input_noise(codes, TMDVConfig(8, 4), key)
+    ev = float(jnp.abs(qv - codes.astype(jnp.float32)).mean())
+    et = float(jnp.abs(qt - codes.astype(jnp.float32)).mean())
+    assert ev > et
+
+
+def test_ir_drop_error_grows_with_array_size():
+    key = jax.random.PRNGKey(0)
+    errs = []
+    for rows in [128, 256, 512, 1024]:
+        x = jax.random.uniform(key, (8, rows), maxval=255.0)
+        w = jax.random.randint(key, (rows, 20), -127, 128).astype(jnp.float32)
+        cfg = CIMConfig(array_rows=rows, adc_bits=12, ir_gamma=0.04,
+                        deterministic=True)
+        y = cim_matmul(x, w, cfg, key)
+        yi = ideal_matmul(x, w)
+        errs.append(float(jnp.abs(y - yi).mean() / jnp.abs(yi).mean()))
+    assert errs == sorted(errs), errs  # monotone in array size (paper Fig. 12)
+
+
+def test_activation_probability_k_plus_1_active():
+    spec = ASPQuantSpec(grid_size=8, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, 4000), jnp.float32)
+    p = basis_activation_probability(x, spec)
+    assert p.shape == (11,)
+    # each input activates exactly K+1 bases
+    np.testing.assert_allclose(float(p.sum()), spec.order + 1, atol=1e-5)
+    # uniform inputs: interior bases more probable than edge bases
+    assert p[0] < p[5] and p[-1] < p[5]
+
+
+def test_sam_puts_probable_rows_near_clamp():
+    spec = ASPQuantSpec(grid_size=8, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.clip(rng.normal(0, 0.3, (4000, 3)), -1, 1), jnp.float32)
+    rw = row_activation_weight(x, spec, 3)
+    perm = sam_permutation(rw)
+    w = np.asarray(rw)
+    # physical position 0 holds the highest-drive logical row
+    assert w[perm[0]] == w.max()
+    assert (np.diff(w[perm]) <= 1e-9).all()
+
+
+def test_sam_improves_accuracy_under_ir_drop():
+    """The Fig. 12 mechanism: same MAC, SAM placement, lower error."""
+    spec = ASPQuantSpec(grid_size=30, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    rng = np.random.default_rng(0)
+    f = 17
+    xs = jnp.asarray(np.clip(rng.normal(0, 0.35, (256, f)), -1, 1), jnp.float32)
+    from repro.core.asp_quant import build_lut, dense_basis_from_codes, quantize_input
+
+    e = build_lut(spec)
+    lut = jnp.asarray(e["lut_q"] * e["scale"], jnp.float32)
+    codes = quantize_input(xs, spec)
+    basis = dense_basis_from_codes(codes, lut, spec)
+    drives = basis.reshape(256, -1) * 255.0
+    w = jnp.asarray(rng.integers(-127, 128, (f * spec.num_basis, 14)), jnp.float32)
+
+    ideal = ideal_matmul(drives, w)
+    cfg = CIMConfig(array_rows=512, adc_bits=10, ir_gamma=0.08, deterministic=True)
+    key = jax.random.PRNGKey(0)
+    base = cim_matmul(drives, w, cfg, key, row_perm=None, x_max=255.0,
+                      adc_calibrate=True)
+    rw = row_activation_weight(xs, spec, f)
+    sam = cim_matmul(drives, w, cfg, key, row_perm=sam_permutation(rw, 512),
+                     x_max=255.0, adc_calibrate=True)
+    err_base = float(jnp.abs(base - ideal).mean())
+    err_sam = float(jnp.abs(sam - ideal).mean())
+    assert err_sam < err_base, (err_sam, err_base)
