@@ -1,0 +1,118 @@
+"""Benchmark the multi-layer KAN inference paths; seeds the perf trajectory.
+
+Three executors over the same quantized network:
+
+  * ``float``      — kan_network_apply float path (Cox-de Boor basis, f32)
+  * ``quant_ref``  — layered jnp quantized path (backend="ref"): per-layer
+                     quantize / SH-LUT / banded matmul with f32 round-trips
+                     between layers
+  * ``fused``      — the fused Pallas pipeline (backend="pallas"): every
+                     layer in the kan_spline kernel, inter-layer
+                     requantization fused, int codes across boundaries
+
+at the paper's KAN1 (17,1,14 / G=5) and KAN2 (G=68) edge configs and one
+transformer-FFN width (the qwen2.5-14b smoke KAN-FFN geometry).  Off-TPU the
+Pallas path runs in interpret mode — those numbers validate plumbing, not
+TPU perf (same caveat as benchmarks/run.py's kernel microbench).
+
+    PYTHONPATH=src python benchmarks/bench_kan_pipeline.py --out BENCH_kan_pipeline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kan_layer import KANSpec, init_kan_network, kan_network_apply
+from repro.core.kan_network_deploy import (
+    default_interpret,
+    deploy_kan_network,
+    kan_network_deploy_apply,
+    quantize_kan_network,
+)
+
+CONFIGS = [
+    # (name, dims, grid)  — KAN1/KAN2 are the paper's edge nets (§4);
+    # ffn_width is the LM deployment surface (models/layers KAN-FFN smoke).
+    ("kan1_17_1_14_g5", (17, 1, 14), 5),
+    ("kan2_17_1_14_g68", (17, 1, 14), 68),
+    ("ffn_64_128_64_g8", (64, 128, 64), 8),
+]
+
+
+def _time_fn(fn, x, repeats: int) -> float:
+    fn(x).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn(x).block_until_ready()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run(batch: int = 128, repeats: int = 10, print_fn=print) -> dict:
+    interpret = default_interpret()
+    rows = []
+    for name, dims, grid in CONFIGS:
+        kspec = KANSpec(dims=dims, grid_size=grid)
+        key = jax.random.PRNGKey(0)
+        params = init_kan_network(key, kspec)
+        qparams = quantize_kan_network(params, kspec)
+        dep = deploy_kan_network(qparams, kspec, batch=batch)
+        x = jax.random.uniform(key, (batch, dims[0]), minval=-1.0, maxval=1.0)
+
+        float_fn = jax.jit(lambda x, ks=kspec, p=params: kan_network_apply(p, x, ks))
+        ref_fn = jax.jit(
+            lambda x, ks=kspec, q=qparams: kan_network_apply(
+                None, x, ks, quantized=True, qparams_list=q
+            )
+        )
+        fused_fn = lambda x, d=dep: kan_network_deploy_apply(
+            d, x, interpret=interpret
+        )
+
+        row = {
+            "name": name,
+            "dims": list(dims),
+            "grid": grid,
+            "batch": batch,
+            "float_us": _time_fn(float_fn, x, repeats),
+            "quant_ref_us": _time_fn(ref_fn, x, repeats),
+            "fused_pallas_us": _time_fn(fused_fn, x, repeats),
+            "pallas_interpret": interpret,
+        }
+        err = float(
+            jnp.abs(fused_fn(x) - ref_fn(x)).max()
+        )
+        row["fused_vs_ref_max_err"] = err
+        rows.append(row)
+        print_fn(
+            f"{name},float_us={row['float_us']:.0f},"
+            f"quant_ref_us={row['quant_ref_us']:.0f},"
+            f"fused_pallas_us={row['fused_pallas_us']:.0f},"
+            f"err={err:.2e}"
+        )
+    return {
+        "benchmark": "kan_pipeline",
+        "backend": jax.default_backend(),
+        "pallas_interpret": interpret,
+        "rows": rows,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_kan_pipeline.json")
+    args = ap.parse_args()
+    result = run(batch=args.batch, repeats=args.repeats)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,11 +44,19 @@ def main():
             h = jnp.tanh(h)
     y_kernel = h
 
+    # 4) the fused multi-layer pipeline: every layer in the Pallas kernel,
+    #    inter-layer requantization fused, activations stay int codes
+    y_fused = kan_network_apply(None, x, kspec, quantized=True,
+                                qparams_list=qparams, backend="pallas",
+                                interpret=True)
+
     print("\nfloat    ", y_float[0, :5])
     print("quantized", y_quant[0, :5])
     print("kernel   ", y_kernel[0, :5])
+    print("fused    ", y_fused[0, :5])
     print("\nmax |float - quantized| =", float(jnp.abs(y_float - y_quant).max()))
     print("max |quantized - kernel| =", float(jnp.abs(y_quant - y_kernel).max()))
+    print("max |quantized - fused|  =", float(jnp.abs(y_quant - y_fused).max()))
     e = quantize_kan_layer(params[0], spec)
     print(f"\nSH-LUT: {len(e['hemi'])} stored entries "
           f"(vs {(spec.order + 1) * spec.codes_per_interval} unfolded, "

@@ -65,6 +65,24 @@ def main():
     for r in sorted(results, key=lambda r: r.rid):
         print(f"  req {r.rid}: {r.output}")
 
+    # same batch on the paper's deployed datapath: FFN blocks ASP-quantized
+    # at startup, every step through the fused kan_spline Pallas pipeline
+    print("\nre-serving on the fused quantized pipeline (kan_deploy=True) ...")
+    qengine = ServeEngine(params, cfg, slots=3, max_len=64, kan_deploy=True)
+    qreqs = [Request(rid=r.rid, prompt=list(r.prompt), max_new_tokens=12)
+             for r in sorted(results, key=lambda r: r.rid)]
+    t0 = time.perf_counter()
+    qresults = qengine.run(qreqs)
+    dt = time.perf_counter() - t0
+    same = sum(
+        q.output == r.output
+        for q, r in zip(sorted(qresults, key=lambda r: r.rid),
+                        sorted(results, key=lambda r: r.rid))
+    )
+    qtokens = sum(len(r.output) for r in qresults)
+    print(f"quantized path: {qtokens} tokens in {dt:.2f}s; "
+          f"{same}/{len(qresults)} requests decode identical tokens")
+
 
 if __name__ == "__main__":
     main()

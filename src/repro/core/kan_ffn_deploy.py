@@ -1,10 +1,13 @@
-"""Deployment path for LM KAN-FFN layers: ASP-quantize + Pallas kernel.
+"""Deployment path for LM KAN-FFN layers: ASP-quantize + fused Pallas pipeline.
 
 Closes the loop between the paper's edge-inference technique and the LM
 substrate: a trained KAN-FFN block (models/layers.init_ffn with
 ffn_kind="kan") is post-training-quantized with ASP-KAN-HAQ (int8 c', shared
-SH-LUT) and executed through the kernels/kan_spline Pallas kernel — the
-exact datapath the paper accelerates, at transformer width.
+SH-LUT) and executed through the kernels/kan_spline **fused pipeline** — both
+KANLinear halves run in the Pallas kernel and the inter-half boundary
+(tanh -> ASP re-coding) is fused into the first half's kernel, so the hidden
+activation crosses the boundary as int codes (plus the raw f32 copy the
+second half's ReLU branch contracts against).
 
     qffn = quantize_kan_ffn(ffn_params, cfg)
     y = kan_ffn_apply_quantized(qffn, x, cfg, interpret=True)   # == ffn(x)
@@ -16,10 +19,19 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .asp_quant import quantize_input
 from .kan_layer import quantize_kan_layer
+from .kan_network_deploy import (
+    DeployedKAN,
+    deploy_kan_ffn_stack,
+    kan_network_deploy_apply,
+)
+from ..kernels.kan_spline.pipeline import make_pipeline_plan
 
-__all__ = ["quantize_kan_ffn", "kan_ffn_apply_quantized"]
+__all__ = [
+    "quantize_kan_ffn",
+    "kan_ffn_apply_quantized",
+    "quantize_kan_ffn_params_tree",
+]
 
 
 def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
@@ -35,34 +47,72 @@ def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
                             spec)
     l2 = quantize_kan_layer({"c": ffn_params["c2"], "w_b": ffn_params["wb2"]},
                             spec)
-    return {"l1": l1, "l2": l2}
+    # precompute the fused-pipeline form ONCE (dequantized + zero-padded to
+    # the batch-independent plan geometry) so serving decode steps don't
+    # re-pad full weight matrices on every forward
+    d, _, hidden = ffn_params["c1"].shape
+    dep = deploy_kan_ffn_stack([l1, l2], (d, hidden, d), spec)
+    return {"l1": l1, "l2": l2,
+            "pipe_l1": dep.layers[0], "pipe_l2": dep.layers[1]}
 
 
 def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
-                            interpret: bool = False) -> jax.Array:
-    """Quantized KAN-FFN forward via the kan_spline Pallas kernel.
+                            interpret: bool | None = None) -> jax.Array:
+    """Quantized KAN-FFN forward via the fused kan_spline pipeline.
 
     x: (B, S, D).  Mirrors models/layers.ffn(kind="kan"): each half applies
-    tanh domain squash -> ASP quantize -> SH-LUT banded matmul + ReLU branch.
+    tanh domain squash -> ASP quantize -> SH-LUT banded matmul, with the ReLU
+    residual branch contracting the RAW pre-squash input (matching the float
+    path models/layers._kan_linear).  ``interpret=None`` auto-selects
+    interpret mode off-TPU.
     """
-    from ..kernels.kan_spline.ops import kan_spline
     from ..models.layers import kan_ffn_spec
 
     spec = kan_ffn_spec(cfg)
     b, s, d = x.shape
-
-    def half(q, h2d):
-        # spline term through the kernel on the tanh-squashed domain; the
-        # ReLU residual branch uses the RAW pre-squash input (matching the
-        # float path models/layers._kan_linear), so it is added outside.
-        codes = quantize_input(jnp.tanh(h2d.astype(jnp.float32)), spec)
-        wc = q["c_q"].astype(jnp.float32) * q["c_scale"]
-        zeros_wb = jnp.zeros((wc.shape[0], wc.shape[-1]), jnp.float32)
-        y = kan_spline(codes, q["lut"], wc, zeros_wb, spec,
-                       interpret=interpret)
-        wb = q["w_b_q"].astype(jnp.float32) * q["w_b_scale"]
-        return y + jax.nn.relu(h2d.astype(jnp.float32)) @ wb
-
-    h = half(qffn["l1"], x.reshape(b * s, d))
-    y = half(qffn["l2"], h)
+    hidden = qffn["l1"]["c_q"].shape[-1]
+    dims, specs = (d, hidden, d), (spec, spec)
+    if "pipe_l1" in qffn:
+        # padded weights were precomputed at quantize time; only the (cheap,
+        # trace-time) geometry plan is built per batch shape
+        dep = DeployedKAN(
+            plan=make_pipeline_plan(b * s, dims, specs, residual_raw=True),
+            layers=(qffn["pipe_l1"], qffn["pipe_l2"]),
+            specs=specs, dims=dims, residual_raw=True,
+        )
+    else:
+        dep = deploy_kan_ffn_stack(
+            [qffn["l1"], qffn["l2"]], dims, spec, batch=b * s
+        )
+    x2 = x.reshape(b * s, d).astype(jnp.float32)
+    y = kan_network_deploy_apply(dep, x2, interpret=interpret)
     return y.reshape(b, s, d).astype(x.dtype)
+
+
+def quantize_kan_ffn_params_tree(params: dict, cfg: ModelConfig) -> dict:
+    """Swap every KAN-FFN block in a model param tree for its quantized form.
+
+    Walks the decoder (and encoder, if present) groups of a
+    models.model.init_params tree; each stacked ``l{i}_ffn`` float dict
+    (leading dim = scan repeats) is replaced by the stacked
+    ``{"l1","l2"}`` qparams dict, which models/layers.ffn dispatches to the
+    fused Pallas pipeline.  Host-side, run once at deploy time.
+    """
+    def q_group(gp: dict) -> dict:
+        out = dict(gp)
+        for k, v in gp.items():
+            if not k.endswith("_ffn"):
+                continue
+            repeats = v["c1"].shape[0]
+            qs = [
+                quantize_kan_ffn(jax.tree.map(lambda a: a[r], v), cfg)
+                for r in range(repeats)
+            ]
+            out[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *qs)
+        return out
+
+    p = dict(params)
+    for stack_key in ("decoder", "encoder"):
+        if stack_key in p:
+            p[stack_key] = [q_group(g) for g in p[stack_key]]
+    return p

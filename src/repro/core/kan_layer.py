@@ -169,7 +169,29 @@ def init_kan_network(key, kspec: KANSpec):
     ]
 
 
-def kan_network_apply(params_list, x, kspec: KANSpec, quantized=False, qparams_list=None):
+def kan_network_apply(params_list, x, kspec: KANSpec, quantized=False,
+                      qparams_list=None, backend="ref", interpret=None):
+    """Apply a KAN stack.
+
+    backend (quantized path only):
+      "ref":    layered jnp composition — quantize / SH-LUT / banded matmul /
+                tanh-rescale per layer, activations round-trip through f32.
+      "pallas": the fused multi-layer executor (kernels/kan_spline/pipeline):
+                every layer runs in the Pallas kernel and inter-layer
+                requantization is fused, activations stay int codes.
+    """
+    if backend not in ("ref", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "pallas":
+        if not quantized:
+            raise ValueError(
+                "backend='pallas' is the fused quantized executor; "
+                "pass quantized=True with qparams_list"
+            )
+        from .kan_network_deploy import deploy_kan_network, kan_network_deploy_apply
+
+        dep = deploy_kan_network(qparams_list, kspec, batch=x.shape[0])
+        return kan_network_deploy_apply(dep, x, interpret=interpret)
     spec = kspec.layer_spec()
     h = x
     n = len(params_list if not quantized else qparams_list)

@@ -1,0 +1,164 @@
+"""Deployment of whole quantized KAN networks onto the fused Pallas pipeline.
+
+``kan_layer.kan_network_apply(..., quantized=True)`` chains layers in Python:
+each layer dequantizes, evaluates, tanh-rescales, and re-quantizes through
+jnp ops — the activations round-trip through f32 between every pair of
+layers.  This module builds the deployed form of the same network for
+``kernels.kan_spline.pipeline``: one static geometry plan for the whole
+stack, zero-padded dequantized weights, and a single-jit executor in which
+activations stay int codes across layer boundaries (the boundary requantizer
+runs inside the producing kernel).
+
+    qparams_list = quantize_kan_network(params_list, kspec)
+    dep = deploy_kan_network(qparams_list, kspec, batch=B)
+    y = kan_network_deploy_apply(dep, x, interpret=True)   # == ref path
+
+The reference composition (``backend="ref"``) stays available for
+conformance: it is exactly the layered ``kan_layer_apply_quantized`` +
+tanh-rescale chain the Pallas path is validated against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .asp_quant import ASPQuantSpec, quantize_input
+from .kan_layer import KANSpec, kan_layer_apply_quantized, quantize_kan_layer
+from ..kernels.kan_spline.pipeline import (
+    PipelinePlan,
+    kan_pipeline,
+    make_pipeline_plan,
+    pad_layer_weights,
+)
+
+__all__ = [
+    "DeployedKAN",
+    "quantize_kan_network",
+    "deploy_kan_network",
+    "deploy_kan_ffn_stack",
+    "kan_network_deploy_apply",
+    "kan_network_apply_ref",
+    "default_interpret",
+]
+
+
+def default_interpret() -> bool:
+    """Pallas kernels need interpret mode off-TPU (CPU containers, CI)."""
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass
+class DeployedKAN:
+    """A quantized KAN stack bound to a pipeline geometry plan.
+
+    layers: tuple of {"lut", "wc", "wb"} with weights already padded to the
+    plan (dequantized f32 — the values the int8 storage decodes to).
+    specs/dims describe the logical network for the ref backend.
+    """
+
+    plan: PipelinePlan
+    layers: tuple
+    specs: tuple
+    dims: tuple
+    residual_raw: bool = False
+
+    def replan(self, batch: int) -> "DeployedKAN":
+        """Rebind to a new batch size (weights/padding are batch-agnostic)."""
+        if batch == self.plan.b:
+            return self
+        plan = make_pipeline_plan(
+            batch, self.dims, self.specs, residual_raw=self.residual_raw
+        )
+        return dataclasses.replace(self, plan=plan)
+
+
+def quantize_kan_network(params_list, kspec: KANSpec):
+    """Post-training-quantize every layer of a KAN stack (host-side)."""
+    spec = kspec.layer_spec()
+    return [quantize_kan_layer(p, spec) for p in params_list]
+
+
+def _dequant_layer(qp: dict) -> tuple:
+    wc = qp["c_q"].astype(jnp.float32) * qp["c_scale"]
+    wb = qp["w_b_q"].astype(jnp.float32) * qp["w_b_scale"]
+    return wc, wb
+
+
+def deploy_kan_network(
+    qparams_list, kspec: KANSpec, *, batch: int = 8
+) -> DeployedKAN:
+    """Bind a quantized KAN stack (single shared spec) to a pipeline plan."""
+    spec = kspec.layer_spec()
+    specs = tuple(spec for _ in qparams_list)
+    dims = tuple(kspec.dims)
+    return _deploy(qparams_list, dims, specs, batch, residual_raw=False)
+
+
+def deploy_kan_ffn_stack(
+    qparams_list, dims: tuple, spec: ASPQuantSpec, *, batch: int = 8
+) -> DeployedKAN:
+    """Bind a KANLinear chain with the raw-input ReLU branch (FFN contract)."""
+    specs = tuple(spec for _ in qparams_list)
+    return _deploy(qparams_list, tuple(dims), specs, batch, residual_raw=True)
+
+
+def _deploy(qparams_list, dims, specs, batch, *, residual_raw) -> DeployedKAN:
+    if len(dims) != len(qparams_list) + 1:
+        raise ValueError(f"dims {dims} vs {len(qparams_list)} layers")
+    plan = make_pipeline_plan(batch, dims, specs, residual_raw=residual_raw)
+    layers = []
+    for qp, lp in zip(qparams_list, plan.layers):
+        wc, wb = _dequant_layer(qp)
+        if wc.shape != (lp.f, lp.spec.num_basis, lp.o):
+            raise ValueError(f"layer weights {wc.shape} != plan {lp}")
+        padded = pad_layer_weights(wc, wb, lp)
+        layers.append({"lut": qp["lut"], **padded})
+    return DeployedKAN(
+        plan=plan, layers=tuple(layers), specs=specs, dims=dims,
+        residual_raw=residual_raw,
+    )
+
+
+def kan_network_deploy_apply(
+    dep: DeployedKAN,
+    x: jax.Array,
+    *,
+    xraw: jax.Array | None = None,
+    interpret: bool | None = None,
+    return_intermediates: bool = False,
+):
+    """Run float input x (B, F0) through the fused Pallas pipeline.
+
+    Entry coding matches the layered reference: ``quantize_input(x, spec0)``
+    for KAN stacks; FFN stacks (residual_raw) quantize ``tanh(x)`` and feed
+    the raw x to the ReLU branch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    dep = dep.replan(x.shape[0])
+    spec0 = dep.specs[0]
+    if dep.residual_raw:
+        xraw = x.astype(jnp.float32) if xraw is None else xraw
+        codes = quantize_input(jnp.tanh(xraw), spec0)
+    else:
+        codes = quantize_input(x, spec0)
+        xraw = None
+    return kan_pipeline(
+        codes, xraw, dep.layers, dep.plan, interpret=interpret,
+        return_intermediates=return_intermediates,
+    )
+
+
+def kan_network_apply_ref(qparams_list, x: jax.Array, kspec: KANSpec):
+    """The layered jnp reference the pipeline is bit-exact against."""
+    spec = kspec.layer_spec()
+    h = x
+    n = len(qparams_list)
+    for li in range(n):
+        h = kan_layer_apply_quantized(qparams_list[li], h, spec)
+        if li < n - 1:
+            h = jnp.tanh(h) * (0.5 * (spec.hi - spec.lo)) + 0.5 * (spec.hi + spec.lo)
+    return h

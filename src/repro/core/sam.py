@@ -1,13 +1,20 @@
 """KAN-SAM: sparsity-aware weight mapping (paper §3.3).
 
 Only K+1 of the G+K basis functions fire for any input, so the word-line rows
-of the c' array have very unequal activation probability.  IR-drop error on a
-BL grows with a row's distance from the clamping circuit, so mapping the
-highest-probability rows NEAREST the clamp minimizes the expected MAC error —
-a pure permutation, no hardware or algorithm change.
+of the c' array have very unequal activation probability.  IR-drop
+attenuation on a BL grows with a row's distance from the clamping circuit,
+and deployment (cim.py) compensates each column digitally by the MEAN
+attenuation over the array.  The placement-dependent residual is therefore
+minimized by mapping the highest-drive rows to positions whose distance is
+CLOSEST TO THE COMPENSATED MEAN — their attenuation then matches the digital
+correction almost exactly, while rarely-firing rows absorb the extreme
+near/far slots where the mismatch is largest.  (Without mean compensation
+this reduces to the paper's nearest-the-clamp mapping: both orderings put
+the bulk of the expected current where its IR-drop exposure is cancelled.)
+A pure permutation, no hardware or algorithm change.
 
 Physical convention used throughout ``cim.py``: physical row 0 is closest to
-the BL clamp (lowest IR-drop error); error grows with physical row index.
+the BL clamp (lowest IR-drop); attenuation grows with physical row index.
 """
 
 from __future__ import annotations
@@ -62,20 +69,22 @@ def sam_permutation(row_weight: jax.Array, array_rows: int | None = None) -> np.
     """perm[p] = logical row placed at physical (flat) position p.
 
     Physical distance from the BL clamp of flat position p is
-    ((p % array_rows) + 1) / array_rows — the near-clamp slots are the FIRST
-    rows of EVERY array tile, so the highest expected-drive logical rows are
-    interleaved across tiles by increasing within-tile distance.
+    ((p % array_rows) + 1) / array_rows; deployment compensates each column
+    by the attenuation at the array's MEAN distance (cim.py).  The highest
+    expected-drive logical rows go to the slots whose distance is closest to
+    that compensated mean (interleaved across array tiles), so their
+    attenuation is cancelled by the digital correction; the rarely-active
+    rows take the extreme near/far slots.
     """
     w = np.asarray(row_weight)
     r = len(w)
     best_first = np.argsort(-w, kind="stable")
-    if array_rows is None or array_rows >= r:
-        pos_by_dist = np.arange(r)
-    else:
-        dist = np.arange(r) % array_rows
-        pos_by_dist = np.argsort(dist, kind="stable")
+    rows = r if array_rows is None else array_rows
+    dist = ((np.arange(r) % rows) + 1.0) / rows
+    mean_d = (rows + 1.0) / (2.0 * rows)
+    pos_by_match = np.argsort(np.abs(dist - mean_d), kind="stable")
     perm = np.empty(r, np.int64)
-    perm[pos_by_dist] = best_first
+    perm[pos_by_match] = best_first
     return perm
 
 

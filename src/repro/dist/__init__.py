@@ -1,0 +1,2 @@
+# Distribution layer: sharding rules (param/opt/cache PartitionSpecs) and
+# gradient compression for the multi-host train/serve dry-runs.

@@ -1,0 +1,381 @@
+"""Fused multi-layer quantized KAN executor on the Pallas path.
+
+The paper's hardware win comes from keeping the *whole* quantized datapath
+(eq. (1)-(3): ASP PowerGap decode -> SH-LUT retrieval -> banded MAC) on the
+accelerator.  ``kernel.py`` covers one layer; this module chains layers so
+that activations stay **int codes** between layers instead of round-tripping
+through dequantized f32 in Python:
+
+  * each layer runs the same fused datapath as ``_kan_spline_kernel``;
+  * the inter-layer boundary — tanh domain rescale followed by
+    ``quantize_input`` re-coding (the TPU analogue of the paper's N:1 TMDV
+    input generator feeding the next array) — is fused into the producing
+    layer's kernel, executed once per output tile on the final contraction
+    step;
+  * the whole stack runs under ONE jit: no per-layer Python dispatch, no
+    host sync, one padding plan for the entire network.
+
+Geometry is described by a static, hashable :class:`PipelinePlan`:
+
+  * batch is padded once to a multiple of ``bb``;
+  * every inter-layer boundary dim is padded to a multiple of 128 (the
+    producing layer's ``bo`` and the consuming layer's ``bf`` both divide it,
+    so codes flow between kernels with NO reslicing);
+  * padded weight rows/cols are zero, so padded lanes contribute nothing —
+    the boundary requantizer maps their tanh(0) midpoint code to rows whose
+    weights are zero in the next layer.
+
+Two residual-branch flavors cover both deployment surfaces:
+
+  * ``residual_raw=False`` (KAN stacks, ``core.kan_layer``): the ReLU branch
+    reads ``relu(dequantize(codes))`` — bit-compatible with
+    ``kan_layer_apply_quantized``.
+  * ``residual_raw=True`` (KAN-FFN, ``core.kan_ffn_deploy``): the ReLU branch
+    reads the RAW pre-squash activation (models/layers._kan_linear contract),
+    which the previous layer emits as a second f32 output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.asp_quant import ASPQuantSpec
+
+__all__ = [
+    "LayerPlan",
+    "PipelinePlan",
+    "make_pipeline_plan",
+    "pad_layer_weights",
+    "kan_pipeline",
+]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pow2_at_least(x: int, lo: int = 8, hi: int = 128) -> int:
+    p = lo
+    while p < min(x, hi):
+        p *= 2
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Static geometry plan
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Static per-layer geometry + boundary behavior (hashable, jit-static)."""
+
+    spec: ASPQuantSpec          # quantization grid of THIS layer's input
+    next_spec: ASPQuantSpec | None  # None -> last layer (emit f32 only)
+    f: int                      # logical input width
+    o: int                      # logical output width
+    fp: int                     # padded input width  (multiple of bf)
+    op: int                     # padded output width (multiple of bo)
+    bb: int
+    bo: int
+    bf: int
+    residual_raw: bool          # ReLU branch source: raw f32 vs deq(codes)
+
+    @property
+    def emit_codes(self) -> bool:
+        return self.next_spec is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    b: int                      # logical batch
+    bp: int                     # padded batch (multiple of layers[0].bb)
+    layers: tuple               # tuple[LayerPlan, ...]
+
+
+# VMEM working-set ceiling for the basis tile (bB, bF, G+K) f32; bf is halved
+# until the tile fits.  4 MiB leaves room for the wc tile + double buffering
+# inside the 16 MiB v5e budget (see kernel.py header for the full budget).
+_BASIS_TILE_BUDGET = 4 * 1024 * 1024
+
+
+def make_pipeline_plan(
+    batch: int,
+    dims: tuple,
+    specs: tuple,
+    *,
+    residual_raw: bool = False,
+    max_block_b: int = 128,
+    max_block_f: int = 128,
+) -> PipelinePlan:
+    """Choose block sizes + padded dims for a whole stack from shapes alone.
+
+    dims: (F0, O0=F1, O1=F2, ...) — len(dims) == n_layers + 1.
+    specs: per-layer ASPQuantSpec, len == n_layers.
+    """
+    n_layers = len(dims) - 1
+    if len(specs) != n_layers:
+        raise ValueError(f"{len(specs)} specs for {n_layers} layers")
+
+    bb = min(max_block_b, _round_up(batch, 8))
+    bp = _round_up(batch, bb)
+
+    layers = []
+    for li in range(n_layers):
+        f, o = dims[li], dims[li + 1]
+        spec = specs[li]
+        nb = spec.num_basis
+        # bf must divide the boundary pad (128) when fed by a previous layer,
+        # so it is a power of two <= 128; shrink until the basis tile fits.
+        # The budget uses the WORST-CASE bb (max_block_b), not the actual bb,
+        # so fp/op are batch-independent and DeployedKAN.replan can swap the
+        # batch without re-padding weights.
+        bf = _pow2_at_least(f) if li == 0 else 128
+        while bf > 8 and max_block_b * bf * nb * 4 > _BASIS_TILE_BUDGET:
+            bf //= 2
+        bo = 128
+        fp = _round_up(f, bf) if li == 0 else _round_up(f, 128)
+        op = _round_up(o, bo)
+        layers.append(
+            LayerPlan(
+                spec=spec,
+                next_spec=specs[li + 1] if li + 1 < n_layers else None,
+                f=f, o=o, fp=fp, op=op,
+                bb=bb, bo=bo, bf=bf,
+                residual_raw=residual_raw,
+            )
+        )
+    return PipelinePlan(b=batch, bp=bp, layers=tuple(layers))
+
+
+def pad_layer_weights(wc: jax.Array, wb: jax.Array, lp: LayerPlan) -> dict:
+    """Zero-pad one layer's dequantized weights to the plan's geometry.
+
+    wc: (F, G+K, O) -> (Fp * (G+K), Op) flattened banded matrix.
+    wb: (F, O)      -> (Fp, Op).
+    """
+    nb = lp.spec.num_basis
+    wc_p = jnp.pad(
+        wc.astype(jnp.float32), ((0, lp.fp - lp.f), (0, 0), (0, lp.op - lp.o))
+    ).reshape(lp.fp * nb, lp.op)
+    wb_p = jnp.pad(
+        wb.astype(jnp.float32), ((0, lp.fp - lp.f), (0, lp.op - lp.o))
+    )
+    return {"wc": wc_p, "wb": wb_p}
+
+
+# ----------------------------------------------------------------------------
+# The fused per-layer kernel (single-layer datapath + fused boundary requant)
+# ----------------------------------------------------------------------------
+
+
+def _pipeline_layer_kernel(
+    *refs,
+    lp: LayerPlan,
+):
+    """One KAN layer tile + (optionally) the fused inter-layer requantizer.
+
+    Ref order: codes, [xraw], lut, wc, wb, y_out, [codes_out].
+    Grid: (Bp/bb, Op/bo, Fp/bf); the F axis (last) is the contraction —
+    y_out accumulates across it, the boundary fires on the final step.
+    """
+    idx = 0
+    codes_ref = refs[idx]; idx += 1
+    xraw_ref = None
+    if lp.residual_raw:
+        xraw_ref = refs[idx]; idx += 1
+    lut_ref = refs[idx]; idx += 1
+    wc_ref = refs[idx]; idx += 1
+    wb_ref = refs[idx]; idx += 1
+    y_ref = refs[idx]; idx += 1
+    codes_out_ref = refs[idx] if lp.emit_codes else None
+
+    spec = lp.spec
+    k_step = pl.program_id(2)
+    n_k = pl.num_programs(2)
+    nb = spec.num_basis
+    kk = spec.order + 1
+    n_local = spec.codes_per_interval
+
+    codes = codes_ref[...]
+    bb, bf = codes.shape
+
+    # --- PowerGap bit split (VPU shift/mask; the "decoder" is free)
+    g = jax.lax.shift_right_logical(codes, spec.ld)
+    local = jax.lax.bitwise_and(codes, n_local - 1)
+
+    # --- SH-LUT retrieval as one-hot matmul (2**LD is tiny: <= 32)
+    flat_local = local.reshape(bb * bf, 1)
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (bb * bf, n_local), 1)
+    onehot = (iota_l == flat_local).astype(jnp.float32)
+    lutv = jax.lax.dot_general(
+        onehot,
+        lut_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bb, bf, kk)
+
+    # --- banded placement: basis[b, f, i] = lutv[b, f, i - g] if 0<=i-g<=K
+    iota_nb = jax.lax.broadcasted_iota(jnp.int32, (bb, bf, nb), 2)
+    d = iota_nb - g[..., None]
+    basis = jnp.zeros((bb, bf, nb), jnp.float32)
+    for dd in range(kk):  # static unroll: K+1 selects
+        basis = basis + jnp.where(d == dd, lutv[..., dd][..., None], 0.0)
+
+    # --- spline MAC on the MXU
+    acc = jax.lax.dot_general(
+        basis.reshape(bb, bf * nb),
+        wc_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- fused residual branch
+    if lp.residual_raw:
+        resid = xraw_ref[...].astype(jnp.float32)
+    else:
+        resid = spec.lo + codes.astype(jnp.float32) * spec.code_step
+    acc = acc + jax.lax.dot_general(
+        jnp.maximum(resid, 0.0),
+        wb_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_step == 0)
+    def _init():
+        y_ref[...] = acc
+
+    @pl.when(k_step > 0)
+    def _accum():
+        y_ref[...] += acc
+
+    if lp.emit_codes:
+        nxt = lp.next_spec
+        half_span = 0.5 * (nxt.hi - nxt.lo)
+        mid = 0.5 * (nxt.hi + nxt.lo)
+        scale = 1.0 / nxt.code_step
+
+        @pl.when(k_step == n_k - 1)
+        def _requant():
+            # the fused boundary: tanh domain rescale -> ASP re-coding.
+            # Ops mirror core.kan_layer.kan_network_apply +
+            # core.asp_quant.quantize_input exactly (bit-exact contract).
+            h = jnp.tanh(y_ref[...]) * half_span + mid
+            q = jnp.floor((h - nxt.lo) * scale + 0.5).astype(jnp.int32)
+            codes_out_ref[...] = jnp.clip(q, 0, nxt.num_codes - 1)
+
+
+def _run_layer(
+    codes: jax.Array,       # (Bp, Fp) int32
+    xraw: jax.Array | None,  # (Bp, Fp) f32, only when lp.residual_raw
+    lut: jax.Array,         # (2**LD, K+1)
+    wc_p: jax.Array,        # (Fp * NB, Op)
+    wb_p: jax.Array,        # (Fp, Op)
+    lp: LayerPlan,
+    bp: int,
+    *,
+    interpret: bool,
+):
+    spec = lp.spec
+    nb = spec.num_basis
+    assert codes.shape == (bp, lp.fp), (codes.shape, bp, lp.fp)
+    assert wc_p.shape == (lp.fp * nb, lp.op), (wc_p.shape, lp.fp, nb, lp.op)
+
+    grid = (bp // lp.bb, lp.op // lp.bo, lp.fp // lp.bf)
+
+    in_specs = [pl.BlockSpec((lp.bb, lp.bf), lambda i, j, k: (i, k))]
+    inputs = [codes]
+    if lp.residual_raw:
+        in_specs.append(pl.BlockSpec((lp.bb, lp.bf), lambda i, j, k: (i, k)))
+        inputs.append(xraw)
+    in_specs += [
+        pl.BlockSpec(
+            (spec.codes_per_interval, spec.order + 1), lambda i, j, k: (0, 0)
+        ),
+        pl.BlockSpec((lp.bf * nb, lp.bo), lambda i, j, k: (k, j)),
+        pl.BlockSpec((lp.bf, lp.bo), lambda i, j, k: (k, j)),
+    ]
+    inputs += [lut, wc_p, wb_p]
+
+    out_specs = [pl.BlockSpec((lp.bb, lp.bo), lambda i, j, k: (i, j))]
+    out_shape = [jax.ShapeDtypeStruct((bp, lp.op), jnp.float32)]
+    if lp.emit_codes:
+        out_specs.append(pl.BlockSpec((lp.bb, lp.bo), lambda i, j, k: (i, j)))
+        out_shape.append(jax.ShapeDtypeStruct((bp, lp.op), jnp.int32))
+
+    kernel = functools.partial(_pipeline_layer_kernel, lp=lp)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    if lp.emit_codes:
+        return outs[0], outs[1]
+    return outs[0], None
+
+
+# ----------------------------------------------------------------------------
+# The single-jit multi-layer executor
+# ----------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "interpret", "return_intermediates")
+)
+def kan_pipeline(
+    codes: jax.Array,        # (B, F0) int32 — entry activation codes
+    xraw: jax.Array | None,  # (B, F0) f32 raw entry input (residual_raw only)
+    layers: tuple,           # per-layer dicts: {"lut", "wc", "wb"} PADDED
+    plan: PipelinePlan,
+    *,
+    interpret: bool = False,
+    return_intermediates: bool = False,
+):
+    """Run the whole quantized KAN stack on the Pallas path under one jit.
+
+    Between layers only int32 activation codes move (plus the raw f32
+    activation when ``residual_raw``); the final layer returns f32 logits
+    sliced back to the logical (B, O_last) shape.
+
+    With ``return_intermediates`` also returns the int32 boundary codes each
+    layer handed to the next (sliced to logical shapes) — the conformance
+    tests assert these are bit-identical to the layered reference's
+    re-quantization.
+    """
+    lp0 = plan.layers[0]
+    b = codes.shape[0]
+    assert b == plan.b, (b, plan.b)
+    codes = jnp.pad(codes, ((0, plan.bp - b), (0, lp0.fp - lp0.f)))
+    if lp0.residual_raw:
+        # padded raw lanes are zero: relu(0) @ zero-padded wb rows == 0
+        xraw = jnp.pad(
+            xraw.astype(jnp.float32), ((0, plan.bp - b), (0, lp0.fp - lp0.f))
+        )
+
+    h_codes, h_raw = codes, xraw
+    y = None
+    boundary_codes = []
+    for lp, lw in zip(plan.layers, layers):
+        y, nxt_codes = _run_layer(
+            h_codes,
+            h_raw if lp.residual_raw else None,
+            lw["lut"], lw["wc"], lw["wb"],
+            lp, plan.bp,
+            interpret=interpret,
+        )
+        if nxt_codes is not None:
+            boundary_codes.append(nxt_codes[: plan.b, : lp.o])
+        h_codes, h_raw = nxt_codes, y
+    out = y[: plan.b, : plan.layers[-1].o]
+    if return_intermediates:
+        return out, tuple(boundary_codes)
+    return out

@@ -12,17 +12,32 @@ import jax
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """Version-compatible mesh construction: axis_types / AxisType only
+    exist on newer jax; fall back through the older APIs."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        pass
+    try:
+        return jax.make_mesh(shape, axes)
+    except AttributeError:
+        import numpy as np
+
+        n = int(np.prod(shape))
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devs, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod meshes: (16,16)=256 chips single-pod; (2,16,16)=512 two-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU demos)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))

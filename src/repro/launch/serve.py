@@ -30,7 +30,11 @@ def main():
     if cfg.family in ("audio",):
         raise SystemExit("serve demo supports decoder-only archs")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, slots=args.slots, max_len=128)
+    # --kan-ffn serves the paper's datapath: FFN blocks are ASP-quantized at
+    # startup and every prefill/decode step runs them through the fused
+    # kan_spline Pallas pipeline (interpret mode auto-selected off-TPU).
+    engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
+                         kan_deploy=args.kan_ffn)
 
     rng = jax.random.PRNGKey(1)
     reqs = []

@@ -152,8 +152,27 @@ def _qkv(p, x, cfg, use_rope, positions):
     # projections are replicated (head count not divisible by the TP axis)
     # the rewrite costs 2·S·D·T flops instead of 2·S·(D+T)·hd — an ~18x
     # compute blowup measured on qwen/phi3 train cells (EXPERIMENTS.md §Perf).
-    q, k, v = jax.lax.optimization_barrier((q, k, v))
+    q, k, v = _grad_safe_barrier((q, k, v))
     return q, k, v
+
+
+# jax.lax.optimization_barrier has no differentiation rule; the barrier is
+# purely a scheduling hint, so its VJP is the identity (with the same barrier
+# applied to the cotangents to keep the backward dots un-reassociated too).
+@jax.custom_vjp
+def _grad_safe_barrier(xs):
+    return jax.lax.optimization_barrier(xs)
+
+
+def _grad_safe_barrier_fwd(xs):
+    return _grad_safe_barrier(xs), None
+
+
+def _grad_safe_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
 
 
 ATTN_CHUNK = 1024  # query-chunk size for the memory-bounded attention path
@@ -417,6 +436,13 @@ def ffn(p, x, cfg: ModelConfig):
     if cfg.ffn_kind == "gelu":
         return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
     if cfg.ffn_kind == "kan":
+        if "l1" in p:
+            # ASP-quantized deployed block (see core.kan_ffn_deploy.
+            # quantize_kan_ffn_params_tree): both halves run through the
+            # fused kan_spline Pallas pipeline, int codes across the boundary.
+            from ..core.kan_ffn_deploy import kan_ffn_apply_quantized
+
+            return kan_ffn_apply_quantized(p, x, cfg)
         h = _kan_linear(p["c1"], p["wb1"], x, cfg)
         return _kan_linear(p["c2"], p["wb2"], h, cfg)
     if cfg.ffn_kind == "none":

@@ -41,7 +41,19 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 kan_deploy: bool = False):
+        if kan_deploy:
+            # Execute every KAN-FFN block on the paper's quantized datapath:
+            # int8 c' + SH-LUT through the fused kan_spline Pallas pipeline
+            # (decode AND prefill steps — the whole serving hot path).
+            if cfg.ffn_kind != "kan":
+                raise ValueError(
+                    "kan_deploy requires a KAN-FFN config (cfg.kan_variant())"
+                )
+            from ..core.kan_ffn_deploy import quantize_kan_ffn_params_tree
+
+            params = quantize_kan_ffn_params_tree(params, cfg)
         self.params = params
         self.cfg = cfg
         self.slots = slots

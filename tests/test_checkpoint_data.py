@@ -66,8 +66,9 @@ def test_elastic_restore_with_new_sharding(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=1)
     t = {"w": jnp.arange(16.0).reshape(4, 4)}
     ck.save(1, t, blocking=True)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _make_mesh
+
+    mesh = _make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     restored, _ = ck.restore_latest(t, shardings=sh)
     assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)

@@ -56,6 +56,54 @@ def test_grid_extension_preserves_function():
     assert p2["c"].shape == (9, 23, 4)
 
 
+@pytest.mark.parametrize("g_old,g_new", [(5, 20), (5, 68), (8, 32), (16, 64)])
+def test_grid_extension_round_trip_dense(g_old, g_new):
+    """Round-trip: the extended-grid spline reproduces the old spline to
+    <1e-4 on a dense sample of the whole domain (original-KAN §2.5 transfer;
+    the KAN1 -> KAN2 G=5 -> 68 case is the paper's own refinement step)."""
+    spec = ASPQuantSpec(grid_size=g_old, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    key = jax.random.PRNGKey(7)
+    p = init_kan_layer(key, 6, 5, spec)
+    p2 = extend_layer_grid(p, spec, g_new)
+    spec_new = dataclasses.replace(spec, grid_size=g_new)
+    assert p2["c"].shape == (6, g_new + spec.order, 5)
+    np.testing.assert_array_equal(np.asarray(p2["w_b"]),
+                                  np.asarray(p["w_b"]))  # w_b untouched
+    x = jnp.linspace(-1.0, 1.0, 1025)[:, None] * jnp.ones((1, 6))
+    y_old = kan_layer_apply(p, x, spec)
+    y_new = kan_layer_apply(p2, x, spec_new)
+    err = float(jnp.abs(y_old - y_new).max())
+    assert err < 1e-4, err
+
+
+def test_grid_extension_composes_with_quantized_path():
+    """Extended layer still quantizes/deploys: G=68 fits 8 bits (LD=1)."""
+    spec = ASPQuantSpec(grid_size=5, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    key = jax.random.PRNGKey(8)
+    p = init_kan_layer(key, 4, 3, spec)
+    p2 = extend_layer_grid(p, spec, 68)
+    spec68 = dataclasses.replace(spec, grid_size=68)
+    qp = quantize_kan_layer(p2, spec68)
+    x = jax.random.uniform(key, (32, 4), minval=-1, maxval=1)
+    y = kan_layer_apply(p2, x, spec68)
+    yq = kan_layer_apply_quantized(qp, x, spec68)
+    err = float(jnp.abs(y - yq).max())
+    scale = float(jnp.abs(y).max())
+    assert err < 0.05 * scale + 0.02, (err, scale)
+
+
+def test_param_count_formula_general():
+    """#Param = edges * (G + K + 1), the paper's counting convention."""
+    assert param_count(KANSpec(dims=(4, 7), grid_size=6, order=2)) \
+        == 4 * 7 * (6 + 2 + 1)
+    assert param_count(KANSpec(dims=(3, 5, 2, 8), grid_size=10, order=3)) \
+        == (3 * 5 + 5 * 2 + 2 * 8) * 14
+    # paper table: KAN2 = KAN1 grid-extended, same edge count
+    kan1 = KANSpec(dims=(17, 1, 14), grid_size=5)
+    kan2 = KANSpec(dims=(17, 1, 14), grid_size=68)
+    assert param_count(kan2) / param_count(kan1) == 72 / 9
+
+
 def test_gradients_flow():
     kspec = KANSpec(dims=(5, 3, 2), grid_size=4)
     key = jax.random.PRNGKey(2)

@@ -1,0 +1,180 @@
+"""Fused multi-layer Pallas pipeline vs the layered quantized reference.
+
+The contract (kernels/kan_spline/pipeline.py): running the whole stack in
+the fused executor — int codes across layer boundaries, requantization fused
+into the producing kernel — must reproduce the layered
+``kan_layer_apply_quantized`` + tanh-rescale composition:
+
+  * the int32 codes each layer hands to the next are BIT-IDENTICAL to the
+    reference's re-quantization (the quantizer output is discrete, so the
+    fused boundary must land on exactly the same codes);
+  * the final f32 output agrees to float-ulp tolerance (the banded matmul
+    is tiled/padded differently, so bit-identity of the f32 accumulation is
+    not required — only of the code stream).
+
+Shapes deliberately include ragged B/F/O (nothing a multiple of the block
+sizes), multi-layer stacks, and both paper configs: KAN1 (17,1,14) G=5 and
+KAN2 G=68.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asp_quant import quantize_input
+from repro.core.kan_layer import (
+    KANSpec,
+    init_kan_network,
+    kan_layer_apply_quantized,
+    kan_network_apply,
+)
+from repro.core.kan_network_deploy import (
+    deploy_kan_ffn_stack,
+    deploy_kan_network,
+    kan_network_apply_ref,
+    kan_network_deploy_apply,
+    quantize_kan_network,
+)
+from repro.kernels.kan_spline.pipeline import make_pipeline_plan
+
+# (dims, grid, batch) — ragged on purpose; first two are the paper's KAN1/KAN2
+SHAPES = [
+    ((17, 1, 14), 5, 33),     # KAN1, odd batch
+    ((17, 1, 14), 68, 7),     # KAN2 (G=68), tiny batch
+    ((3, 2), 4, 1),           # single layer, degenerate everything
+    ((5, 9, 3, 2), 8, 130),   # 3-layer stack, batch > one tile
+    ((40, 77, 13), 16, 19),   # wide ragged middle
+]
+
+
+def _ref_with_boundary_codes(qparams, x, kspec):
+    """Layered reference, also returning each boundary's re-quantized codes."""
+    spec = kspec.layer_spec()
+    h = x
+    codes = []
+    n = len(qparams)
+    for li in range(n):
+        h = kan_layer_apply_quantized(qparams[li], h, spec)
+        if li < n - 1:
+            h = jnp.tanh(h) * (0.5 * (spec.hi - spec.lo)) \
+                + 0.5 * (spec.hi + spec.lo)
+            codes.append(quantize_input(h, spec))
+    return h, codes
+
+
+@pytest.mark.parametrize("dims,grid,batch", SHAPES)
+def test_fused_pipeline_matches_layered_reference(dims, grid, batch):
+    kspec = KANSpec(dims=dims, grid_size=grid)
+    key = jax.random.PRNGKey(0)
+    params = init_kan_network(key, kspec)
+    qparams = quantize_kan_network(params, kspec)
+    x = jax.random.uniform(key, (batch, dims[0]), minval=-1.0, maxval=1.0)
+
+    ref, ref_codes = _ref_with_boundary_codes(qparams, x, kspec)
+    dep = deploy_kan_network(qparams, kspec, batch=batch)
+    out, codes = kan_network_deploy_apply(
+        dep, x, interpret=True, return_intermediates=True
+    )
+
+    assert out.shape == (batch, dims[-1])
+    assert len(codes) == len(ref_codes)
+    for li, (c, rc) in enumerate(zip(codes, ref_codes)):
+        np.testing.assert_array_equal(
+            np.asarray(c), np.asarray(rc),
+            err_msg=f"boundary codes after layer {li} not bit-exact",
+        )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_backend_switch_in_kan_network_apply():
+    kspec = KANSpec(dims=(17, 1, 14), grid_size=5)
+    key = jax.random.PRNGKey(1)
+    params = init_kan_network(key, kspec)
+    qparams = quantize_kan_network(params, kspec)
+    x = jax.random.uniform(key, (12, 17), minval=-1.0, maxval=1.0)
+
+    y_ref = kan_network_apply(None, x, kspec, quantized=True,
+                              qparams_list=qparams, backend="ref")
+    y_pal = kan_network_apply(None, x, kspec, quantized=True,
+                              qparams_list=qparams, backend="pallas",
+                              interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y_pal), np.asarray(y_ref), atol=1e-5, rtol=1e-5
+    )
+    with pytest.raises(ValueError):
+        kan_network_apply(None, x, kspec, quantized=True,
+                          qparams_list=qparams, backend="tpu-magic")
+
+
+def test_kan_network_apply_ref_equals_layered_composition():
+    kspec = KANSpec(dims=(5, 9, 3, 2), grid_size=8)
+    key = jax.random.PRNGKey(2)
+    qparams = quantize_kan_network(init_kan_network(key, kspec), kspec)
+    x = jax.random.uniform(key, (9, 5), minval=-1.0, maxval=1.0)
+    a = kan_network_apply_ref(qparams, x, kspec)
+    b = kan_network_apply(None, x, kspec, quantized=True, qparams_list=qparams)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ffn_stack_raw_residual_matches_composition():
+    """residual_raw contract: ReLU branch reads the RAW pre-squash input
+    (models/layers._kan_linear), boundary stays tanh->requantize."""
+    from repro.core.asp_quant import ASPQuantSpec, dense_basis_from_codes
+
+    spec = ASPQuantSpec(grid_size=8, order=3, n_bits=8, lo=-1.0, hi=1.0)
+    dims = (20, 33, 20)
+    key = jax.random.PRNGKey(3)
+    kspec = KANSpec(dims=dims, grid_size=8)
+    qparams = quantize_kan_network(init_kan_network(key, kspec), kspec)
+    x = jax.random.normal(key, (13, dims[0])) * 0.7
+
+    # layered reference with the FFN residual convention
+    h = x.astype(jnp.float32)
+    for qp in qparams:
+        codes = quantize_input(jnp.tanh(h), spec)
+        basis = dense_basis_from_codes(codes, qp["lut"], spec)
+        wc = qp["c_q"].astype(jnp.float32) * qp["c_scale"]
+        wb = qp["w_b_q"].astype(jnp.float32) * qp["w_b_scale"]
+        f, nb, o = wc.shape
+        y = basis.reshape(h.shape[0], f * nb) @ wc.reshape(f * nb, o)
+        h = y + jax.nn.relu(h) @ wb
+    dep = deploy_kan_ffn_stack(qparams, dims, spec, batch=13)
+    out = kan_network_deploy_apply(dep, x, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(h), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_pipeline_plan_geometry_is_consistent():
+    """Boundary pads line up (producer op == consumer fp) and blocks divide."""
+    kspec = KANSpec(dims=(17, 130, 1, 14), grid_size=68)
+    specs = tuple(kspec.layer_spec() for _ in range(3))
+    plan = make_pipeline_plan(33, kspec.dims, specs)
+    assert plan.bp % plan.layers[0].bb == 0
+    for lp in plan.layers:
+        assert lp.fp % lp.bf == 0 and lp.op % lp.bo == 0
+        assert lp.fp >= lp.f and lp.op >= lp.o
+        # basis tile stays inside the VMEM working-set ceiling
+        assert lp.bb * lp.bf * lp.spec.num_basis * 4 <= 4 * 1024 * 1024
+    for a, b in zip(plan.layers[:-1], plan.layers[1:]):
+        assert a.op == b.fp, "codes must flow between layers without reslicing"
+        assert a.o == b.f
+
+
+def test_replan_changes_batch_only():
+    kspec = KANSpec(dims=(17, 1, 14), grid_size=5)
+    qparams = quantize_kan_network(
+        init_kan_network(jax.random.PRNGKey(0), kspec), kspec
+    )
+    dep = deploy_kan_network(qparams, kspec, batch=8)
+    dep2 = dep.replan(640)
+    assert dep2.plan.b == 640 and dep2.plan.bp % dep2.plan.layers[0].bb == 0
+    assert dep2.layers is dep.layers  # weights/padding are batch-agnostic
+    x = jax.random.uniform(jax.random.PRNGKey(1), (640, 17), minval=-1, maxval=1)
+    out = kan_network_deploy_apply(dep2, x, interpret=True)
+    ref = kan_network_apply_ref(qparams, x, kspec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)

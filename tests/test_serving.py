@@ -57,6 +57,46 @@ def test_prefill_then_decode_matches_forward(name):
         assert err < 2e-3 * scale + 1e-4, (name, i, err)
 
 
+def test_serve_engine_kan_ffn_fused_path_matches_float_tokens():
+    """--kan-ffn serving regression: a small greedy batch decodes the SAME
+    tokens whether the KAN-FFN blocks run on the float path or are
+    ASP-quantized and executed through the fused Pallas pipeline
+    (kan_deploy=True, interpret mode on CPU).  int8 + SH-LUT error is far
+    below the greedy argmax margin on this config."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(42)
+        reqs = []
+        for rid in range(3):
+            rng, k = jax.random.split(rng)
+            prompt = jax.random.randint(k, (6,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=4))
+        return reqs
+
+    float_engine = ServeEngine(params, cfg, slots=2, max_len=32)
+    float_out = {r.rid: r.output for r in float_engine.run(make_reqs())}
+
+    fused_engine = ServeEngine(params, cfg, slots=2, max_len=32,
+                               kan_deploy=True)
+    fused_out = {r.rid: r.output for r in fused_engine.run(make_reqs())}
+
+    assert fused_out == float_out
+
+
+def test_serve_engine_kan_deploy_rejects_non_kan_config():
+    from repro.serve.engine import ServeEngine
+
+    cfg = smoke_config("qwen2.5-14b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
+
+
 def test_rolling_window_cache_exceeding_window():
     """Decode past the window: rolling cache must equal full SWA attention."""
     cfg = smoke_config("mixtral-8x7b")

@@ -63,17 +63,22 @@ def test_pure_voltage_noisier_than_tmdv():
 
 
 def test_ir_drop_error_grows_with_array_size():
+    """Monotone in array size (paper Fig. 12).  The residual after mean-drop
+    compensation is a random covariance between (x*w) and row distance, so a
+    tiny 8x20 sample is dominated by draw noise — estimate over a 64x64 MAC
+    with independent draws per size."""
     key = jax.random.PRNGKey(0)
     errs = []
     for rows in [128, 256, 512, 1024]:
-        x = jax.random.uniform(key, (8, rows), maxval=255.0)
-        w = jax.random.randint(key, (rows, 20), -127, 128).astype(jnp.float32)
+        kx, kw = jax.random.split(jax.random.fold_in(key, rows))
+        x = jax.random.uniform(kx, (64, rows), maxval=255.0)
+        w = jax.random.randint(kw, (rows, 64), -127, 128).astype(jnp.float32)
         cfg = CIMConfig(array_rows=rows, adc_bits=12, ir_gamma=0.04,
                         deterministic=True)
         y = cim_matmul(x, w, cfg, key)
         yi = ideal_matmul(x, w)
         errs.append(float(jnp.abs(y - yi).mean() / jnp.abs(yi).mean()))
-    assert errs == sorted(errs), errs  # monotone in array size (paper Fig. 12)
+    assert errs == sorted(errs), errs
 
 
 def test_activation_probability_k_plus_1_active():
@@ -87,16 +92,25 @@ def test_activation_probability_k_plus_1_active():
     assert p[0] < p[5] and p[-1] < p[5]
 
 
-def test_sam_puts_probable_rows_near_clamp():
+def test_sam_puts_probable_rows_at_compensated_mean():
+    """Placement contract: drive decreases with a slot's distance from the
+    digitally-compensated mean distance (cim.py's per-column correction), so
+    the heavy rows sit where the correction cancels their attenuation."""
     spec = ASPQuantSpec(grid_size=8, order=3, n_bits=8, lo=-1.0, hi=1.0)
     rng = np.random.default_rng(0)
     x = jnp.asarray(np.clip(rng.normal(0, 0.3, (4000, 3)), -1, 1), jnp.float32)
     rw = row_activation_weight(x, spec, 3)
     perm = sam_permutation(rw)
     w = np.asarray(rw)
-    # physical position 0 holds the highest-drive logical row
-    assert w[perm[0]] == w.max()
-    assert (np.diff(w[perm]) <= 1e-9).all()
+    r = len(w)
+    dist = (np.arange(r) + 1.0) / r
+    mismatch = np.abs(dist - (r + 1.0) / (2.0 * r))
+    order = np.argsort(mismatch, kind="stable")
+    # the best-matched slot holds the highest-drive logical row, and drive
+    # is non-increasing as the slot mismatch grows
+    assert w[perm[order[0]]] == w.max()
+    assert (np.diff(w[perm[order]]) <= 1e-9).all()
+    assert sorted(perm) == list(range(r))  # a permutation, nothing dropped
 
 
 def test_sam_improves_accuracy_under_ir_drop():
