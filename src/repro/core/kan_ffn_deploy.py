@@ -20,12 +20,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .kan_layer import quantize_kan_layer
-from .kan_network_deploy import (
-    DeployedKAN,
-    deploy_kan_ffn_stack,
-    kan_network_deploy_apply,
-)
-from ..kernels.kan_spline.pipeline import make_pipeline_plan
+from .kan_network_deploy import deploy_kan_ffn_stack, kan_network_deploy_apply
 
 __all__ = [
     "quantize_kan_ffn",
@@ -38,7 +33,15 @@ def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
     """Quantize both KANLinear halves of a KAN-FFN block.
 
     ffn_params: {"c1","wb1","c2","wb2"} from models/layers.init_ffn.
-    Returns {"l1": qparams, "l2": qparams} (see kan_layer.quantize_kan_layer).
+    Returns {"l1": qparams, "l2": qparams} (see kan_layer.quantize_kan_layer)
+    — the int8 + SH-LUT form is the ONLY stored copy (the paper's deployed
+    residency; the old precomputed ``pipe_l1/l2`` duplicate doubled it).
+    The runtime derives the padded f32 pipeline form on demand inside its
+    cached executors.  Trade-off, made deliberately: when the qparams are
+    jit *arguments* (the serving path) the dequantize+pad is O(weight size)
+    elementwise work re-executed per forward — the standard weight-only-
+    quantization deal (int8 at rest and on the HBM read, decode on the fly)
+    — while eager/deploy-time callers get it constant-folded at trace.
     """
     from ..models.layers import kan_ffn_spec
 
@@ -47,45 +50,34 @@ def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
                             spec)
     l2 = quantize_kan_layer({"c": ffn_params["c2"], "w_b": ffn_params["wb2"]},
                             spec)
-    # precompute the fused-pipeline form ONCE (dequantized + zero-padded to
-    # the batch-independent plan geometry) so serving decode steps don't
-    # re-pad full weight matrices on every forward
-    d, _, hidden = ffn_params["c1"].shape
-    dep = deploy_kan_ffn_stack([l1, l2], (d, hidden, d), spec)
-    return {"l1": l1, "l2": l2,
-            "pipe_l1": dep.layers[0], "pipe_l2": dep.layers[1]}
+    return {"l1": l1, "l2": l2}
 
 
 def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
-                            interpret: bool | None = None) -> jax.Array:
-    """Quantized KAN-FFN forward via the fused kan_spline pipeline.
+                            interpret: bool | None = None,
+                            backend: str | None = None,
+                            key=None) -> jax.Array:
+    """Quantized KAN-FFN forward via the runtime-resolved executor.
 
     x: (B, S, D).  Mirrors models/layers.ffn(kind="kan"): each half applies
     tanh domain squash -> ASP quantize -> SH-LUT banded matmul, with the ReLU
     residual branch contracting the RAW pre-squash input (matching the float
     path models/layers._kan_linear).  ``interpret=None`` auto-selects
-    interpret mode off-TPU.
+    interpret mode off-TPU; ``backend=None`` resolves through
+    ``repro.runtime`` (scope > ``REPRO_KAN_BACKEND`` > "pallas").
     """
     from ..models.layers import kan_ffn_spec
 
     spec = kan_ffn_spec(cfg)
     b, s, d = x.shape
     hidden = qffn["l1"]["c_q"].shape[-1]
-    dims, specs = (d, hidden, d), (spec, spec)
-    if "pipe_l1" in qffn:
-        # padded weights were precomputed at quantize time; only the (cheap,
-        # trace-time) geometry plan is built per batch shape
-        dep = DeployedKAN(
-            plan=make_pipeline_plan(b * s, dims, specs, residual_raw=True),
-            layers=(qffn["pipe_l1"], qffn["pipe_l2"]),
-            specs=specs, dims=dims, residual_raw=True,
-        )
-    else:
-        dep = deploy_kan_ffn_stack(
-            [qffn["l1"], qffn["l2"]], dims, spec, batch=b * s
-        )
+    dep = deploy_kan_ffn_stack(
+        [qffn["l1"], qffn["l2"]], (d, hidden, d), spec, batch=b * s
+    )
     x2 = x.reshape(b * s, d).astype(jnp.float32)
-    y = kan_network_deploy_apply(dep, x2, interpret=interpret)
+    y = kan_network_deploy_apply(
+        dep, x2, interpret=interpret, backend=backend, key=key
+    )
     return y.reshape(b, s, d).astype(x.dtype)
 
 

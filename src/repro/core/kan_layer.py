@@ -170,36 +170,44 @@ def init_kan_network(key, kspec: KANSpec):
 
 
 def kan_network_apply(params_list, x, kspec: KANSpec, quantized=False,
-                      qparams_list=None, backend="ref", interpret=None):
+                      qparams_list=None, backend=None, interpret=None,
+                      key=None):
     """Apply a KAN stack.
 
-    backend (quantized path only):
+    The quantized path resolves its backend through ``repro.runtime``
+    (explicit arg > ``use_backend`` scope > ``REPRO_KAN_BACKEND`` env var >
+    "ref"):
+
       "ref":    layered jnp composition — quantize / SH-LUT / banded matmul /
                 tanh-rescale per layer, activations round-trip through f32.
       "pallas": the fused multi-layer executor (kernels/kan_spline/pipeline):
                 every layer runs in the Pallas kernel and inter-layer
                 requantization is fused, activations stay int codes.
+      "acim":   the fused executor with the paper's RRAM-ACIM non-idealities
+                injected at the MAC stage (pass ``key`` to seed the noise).
     """
-    if backend not in ("ref", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
-    if backend == "pallas":
-        if not quantized:
-            raise ValueError(
-                "backend='pallas' is the fused quantized executor; "
-                "pass quantized=True with qparams_list"
-            )
-        from .kan_network_deploy import deploy_kan_network, kan_network_deploy_apply
+    if quantized:
+        from .. import runtime
+        from .kan_network_deploy import (
+            deploy_kan_network,
+            kan_network_deploy_apply,
+        )
 
+        name = runtime.resolve_backend(backend, default="ref")
         dep = deploy_kan_network(qparams_list, kspec, batch=x.shape[0])
-        return kan_network_deploy_apply(dep, x, interpret=interpret)
+        return kan_network_deploy_apply(
+            dep, x, interpret=interpret, backend=name, key=key
+        )
+    if backend not in (None, "ref"):
+        raise ValueError(
+            f"backend={backend!r} is a quantized executor; "
+            "pass quantized=True with qparams_list"
+        )
     spec = kspec.layer_spec()
     h = x
-    n = len(params_list if not quantized else qparams_list)
+    n = len(params_list)
     for li in range(n):
-        if quantized:
-            h = kan_layer_apply_quantized(qparams_list[li], h, spec)
-        else:
-            h = kan_layer_apply(params_list[li], h, spec)
+        h = kan_layer_apply(params_list[li], h, spec)
         if li < n - 1:
             # keep hidden activations inside the knot domain (KAN layers
             # calibrate their domain; tanh is the standard bounded choice)

@@ -1,21 +1,17 @@
-"""Deployment of whole quantized KAN networks onto the fused Pallas pipeline.
+"""Deployment of whole quantized KAN networks: quantize + bind for the runtime.
 
-``kan_layer.kan_network_apply(..., quantized=True)`` chains layers in Python:
-each layer dequantizes, evaluates, tanh-rescales, and re-quantizes through
-jnp ops — the activations round-trip through f32 between every pair of
-layers.  This module builds the deployed form of the same network for
-``kernels.kan_spline.pipeline``: one static geometry plan for the whole
-stack, zero-padded dequantized weights, and a single-jit executor in which
-activations stay int codes across layer boundaries (the boundary requantizer
-runs inside the producing kernel).
+This module is the thin host-side layer between trained/quantized KAN params
+and :mod:`repro.runtime`: it post-training-quantizes a stack, dequantizes and
+zero-pads the weights to the batch-independent pipeline geometry, and hands
+the resulting :class:`DeployedKAN` bundle to the runtime's executor registry.
+All *execution* concerns — backend selection (``ref`` / ``pallas`` /
+``acim``), batch bucketing, plan/compile caching, non-ideality injection —
+live in the runtime, not here.
 
     qparams_list = quantize_kan_network(params_list, kspec)
     dep = deploy_kan_network(qparams_list, kspec, batch=B)
-    y = kan_network_deploy_apply(dep, x, interpret=True)   # == ref path
-
-The reference composition (``backend="ref"``) stays available for
-conformance: it is exactly the layered ``kan_layer_apply_quantized`` +
-tanh-rescale chain the Pallas path is validated against.
+    y = kan_network_deploy_apply(dep, x)                 # resolved backend
+    y = kan_network_deploy_apply(dep, x, backend="acim", key=key)
 """
 
 from __future__ import annotations
@@ -25,14 +21,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .asp_quant import ASPQuantSpec, quantize_input
-from .kan_layer import KANSpec, kan_layer_apply_quantized, quantize_kan_layer
-from ..kernels.kan_spline.pipeline import (
-    PipelinePlan,
-    kan_pipeline,
-    make_pipeline_plan,
-    pad_layer_weights,
-)
+from .asp_quant import ASPQuantSpec
+from .kan_layer import KANSpec, quantize_kan_layer
+from .. import runtime
+from ..kernels.kan_spline.pipeline import PipelinePlan, pad_layer_weights
+from ..runtime.executor import default_interpret  # re-export (PR-1 API)
 
 __all__ = [
     "DeployedKAN",
@@ -45,18 +38,13 @@ __all__ = [
 ]
 
 
-def default_interpret() -> bool:
-    """Pallas kernels need interpret mode off-TPU (CPU containers, CI)."""
-    return jax.default_backend() != "tpu"
-
-
 @dataclasses.dataclass
 class DeployedKAN:
     """A quantized KAN stack bound to a pipeline geometry plan.
 
     layers: tuple of {"lut", "wc", "wb"} with weights already padded to the
     plan (dequantized f32 — the values the int8 storage decodes to).
-    specs/dims describe the logical network for the ref backend.
+    specs/dims describe the logical network for the runtime backends.
     """
 
     plan: PipelinePlan
@@ -66,10 +54,12 @@ class DeployedKAN:
     residual_raw: bool = False
 
     def replan(self, batch: int) -> "DeployedKAN":
-        """Rebind to a new batch size (weights/padding are batch-agnostic)."""
+        """Rebind to a new batch size — a plan-cache lookup, not a rebuild
+        (weights/padding are batch-agnostic; the runtime buckets batches on
+        its own, so this only matters for geometry introspection)."""
         if batch == self.plan.b:
             return self
-        plan = make_pipeline_plan(
+        plan = runtime.PLAN_CACHE.plan(
             batch, self.dims, self.specs, residual_raw=self.residual_raw
         )
         return dataclasses.replace(self, plan=plan)
@@ -108,7 +98,8 @@ def deploy_kan_ffn_stack(
 def _deploy(qparams_list, dims, specs, batch, *, residual_raw) -> DeployedKAN:
     if len(dims) != len(qparams_list) + 1:
         raise ValueError(f"dims {dims} vs {len(qparams_list)} layers")
-    plan = make_pipeline_plan(batch, dims, specs, residual_raw=residual_raw)
+    plan = runtime.PLAN_CACHE.plan(batch, dims, specs,
+                                   residual_raw=residual_raw)
     layers = []
     for qp, lp in zip(qparams_list, plan.layers):
         wc, wb = _dequant_layer(qp)
@@ -128,37 +119,35 @@ def kan_network_deploy_apply(
     *,
     xraw: jax.Array | None = None,
     interpret: bool | None = None,
+    backend: str | None = None,
+    key=None,
+    cim=None,
     return_intermediates: bool = False,
 ):
-    """Run float input x (B, F0) through the fused Pallas pipeline.
+    """Run float input x (B, F0) through the runtime-resolved backend.
 
-    Entry coding matches the layered reference: ``quantize_input(x, spec0)``
-    for KAN stacks; FFN stacks (residual_raw) quantize ``tanh(x)`` and feed
-    the raw x to the ReLU branch.
+    ``backend=None`` resolves via the runtime (scope > ``REPRO_KAN_BACKEND``
+    env var > "pallas").  ``key``/``cim`` only matter for the acim backend.
     """
-    if interpret is None:
-        interpret = default_interpret()
-    dep = dep.replan(x.shape[0])
-    spec0 = dep.specs[0]
-    if dep.residual_raw:
-        xraw = x.astype(jnp.float32) if xraw is None else xraw
-        codes = quantize_input(jnp.tanh(xraw), spec0)
-    else:
-        codes = quantize_input(x, spec0)
-        xraw = None
-    return kan_pipeline(
-        codes, xraw, dep.layers, dep.plan, interpret=interpret,
+    return runtime.execute(
+        dep, x, backend=backend, default="pallas",
+        xraw=xraw, interpret=interpret, key=key, cim=cim,
         return_intermediates=return_intermediates,
     )
 
 
 def kan_network_apply_ref(qparams_list, x: jax.Array, kspec: KANSpec):
-    """The layered jnp reference the pipeline is bit-exact against."""
+    """The layered jnp reference the pipeline is bit-exact against
+    (runtime ``ref`` composition over the un-padded quantized weights)."""
+    from ..core.asp_quant import quantize_input
+
     spec = kspec.layer_spec()
-    h = x
-    n = len(qparams_list)
-    for li in range(n):
-        h = kan_layer_apply_quantized(qparams_list[li], h, spec)
-        if li < n - 1:
-            h = jnp.tanh(h) * (0.5 * (spec.hi - spec.lo)) + 0.5 * (spec.hi + spec.lo)
-    return h
+    logical = []
+    for qp in qparams_list:
+        wc, wb = _dequant_layer(qp)
+        logical.append((qp["lut"], wc, wb))
+    codes = quantize_input(x, spec)
+    return runtime.ref_composition(
+        logical, tuple(spec for _ in qparams_list), codes, None,
+        residual_raw=False,
+    )

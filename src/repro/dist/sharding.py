@@ -21,6 +21,7 @@ __all__ = [
     "opt_state_pspecs",
     "batch_pspec",
     "cache_pspecs",
+    "deployed_kan_pspecs",
     "to_shardings",
 ]
 
@@ -140,6 +141,32 @@ def cache_pspecs(cache, mesh, batch: int):
         return P(*parts)
 
     return jax.tree.map(one, cache)
+
+
+def deployed_kan_pspecs(dep, mesh):
+    """PartitionSpecs for a ``repro.runtime`` deployed-KAN bundle's layers.
+
+    The padded banded weights shard their OUTPUT-channel dim on "model"
+    (each shard owns whole columns of the MAC — no cross-shard reduction,
+    matching the per-output-channel quantization scales), the shared SH-LUT
+    stays replicated.  Padded dims are multiples of 128, so the
+    divisibility guard passes for any power-of-two model axis <= 128.
+    """
+    msize = _axis_size(mesh, "model")
+
+    def one_layer(lw):
+        def col_spec(a):
+            if msize > 1 and a.shape[-1] % msize == 0:
+                return P(*([None] * (a.ndim - 1) + ["model"]))
+            return P(*([None] * a.ndim))
+
+        return {
+            "lut": P(*([None] * lw["lut"].ndim)),
+            "wc": col_spec(lw["wc"]),
+            "wb": col_spec(lw["wb"]),
+        }
+
+    return tuple(one_layer(lw) for lw in dep.layers)
 
 
 def to_shardings(pspecs, mesh):

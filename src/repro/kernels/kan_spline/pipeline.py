@@ -52,6 +52,7 @@ __all__ = [
     "make_pipeline_plan",
     "pad_layer_weights",
     "kan_pipeline",
+    "kan_pipeline_impl",
 ]
 
 
@@ -177,12 +178,20 @@ def pad_layer_weights(wc: jax.Array, wb: jax.Array, lp: LayerPlan) -> dict:
 def _pipeline_layer_kernel(
     *refs,
     lp: LayerPlan,
+    has_psum_noise: bool = False,
 ):
     """One KAN layer tile + (optionally) the fused inter-layer requantizer.
 
-    Ref order: codes, [xraw], lut, wc, wb, y_out, [codes_out].
+    Ref order: codes, [xraw], lut, wc, wb, [psum_noise], y_out, [codes_out].
     Grid: (Bp/bb, Op/bo, Fp/bf); the F axis (last) is the contraction —
     y_out accumulates across it, the boundary fires on the final step.
+
+    ``psum_noise`` is the ACIM backend's hook: a precomputed (bb, bo) f32
+    perturbation (the macro's partial-sum error, already scaled for the
+    number of physical arrays this column spans) folded into the
+    accumulator on the first contraction step — so the fused boundary
+    requantizer sees the NOISY pre-activation and the error propagates
+    through the int-code stream exactly as it would on silicon.
     """
     idx = 0
     codes_ref = refs[idx]; idx += 1
@@ -192,6 +201,9 @@ def _pipeline_layer_kernel(
     lut_ref = refs[idx]; idx += 1
     wc_ref = refs[idx]; idx += 1
     wb_ref = refs[idx]; idx += 1
+    noise_ref = None
+    if has_psum_noise:
+        noise_ref = refs[idx]; idx += 1
     y_ref = refs[idx]; idx += 1
     codes_out_ref = refs[idx] if lp.emit_codes else None
 
@@ -249,7 +261,10 @@ def _pipeline_layer_kernel(
 
     @pl.when(k_step == 0)
     def _init():
-        y_ref[...] = acc
+        if noise_ref is not None:
+            y_ref[...] = acc + noise_ref[...]
+        else:
+            y_ref[...] = acc
 
     @pl.when(k_step > 0)
     def _accum():
@@ -281,6 +296,7 @@ def _run_layer(
     bp: int,
     *,
     interpret: bool,
+    psum_noise: jax.Array | None = None,  # (Bp, Op) f32 (acim backend)
 ):
     spec = lp.spec
     nb = spec.num_basis
@@ -302,6 +318,10 @@ def _run_layer(
         pl.BlockSpec((lp.bf, lp.bo), lambda i, j, k: (k, j)),
     ]
     inputs += [lut, wc_p, wb_p]
+    if psum_noise is not None:
+        assert psum_noise.shape == (bp, lp.op), (psum_noise.shape, bp, lp.op)
+        in_specs.append(pl.BlockSpec((lp.bb, lp.bo), lambda i, j, k: (i, j)))
+        inputs.append(psum_noise)
 
     out_specs = [pl.BlockSpec((lp.bb, lp.bo), lambda i, j, k: (i, j))]
     out_shape = [jax.ShapeDtypeStruct((bp, lp.op), jnp.float32)]
@@ -309,7 +329,9 @@ def _run_layer(
         out_specs.append(pl.BlockSpec((lp.bb, lp.bo), lambda i, j, k: (i, j)))
         out_shape.append(jax.ShapeDtypeStruct((bp, lp.op), jnp.int32))
 
-    kernel = functools.partial(_pipeline_layer_kernel, lp=lp)
+    kernel = functools.partial(
+        _pipeline_layer_kernel, lp=lp, has_psum_noise=psum_noise is not None
+    )
     outs = pl.pallas_call(
         kernel,
         grid=grid,
@@ -324,17 +346,66 @@ def _run_layer(
 
 
 # ----------------------------------------------------------------------------
-# The single-jit multi-layer executor
+# The multi-layer executor: unjitted body + the single-jit entry point
 # ----------------------------------------------------------------------------
+
+
+def kan_pipeline_impl(
+    codes: jax.Array,        # (B, F0) int32 — entry activation codes
+    xraw: jax.Array | None,  # (B, F0) f32 raw entry input (residual_raw only)
+    layers: tuple,           # per-layer dicts: {"lut", "wc", "wb"} PADDED
+    plan: PipelinePlan,
+    *,
+    interpret: bool = False,
+    psum_noises: tuple | None = None,  # per-layer (Bp, Op) f32 or None (acim)
+    return_intermediates: bool = False,
+):
+    """Unjitted pipeline body: plan application split from jit dispatch.
+
+    ``repro.runtime`` backends wrap this under their own per-cache-entry
+    jit — the pallas backend calls it as-is, the acim backend pre-transforms
+    the weights (IR-drop) and threads per-layer ``psum_noises`` into the MAC
+    stage, so non-ideality injection never forks the kernel itself.
+    """
+    lp0 = plan.layers[0]
+    b = codes.shape[0]
+    assert b == plan.b, (b, plan.b)
+    codes = jnp.pad(codes, ((0, plan.bp - b), (0, lp0.fp - lp0.f)))
+    if lp0.residual_raw:
+        # padded raw lanes are zero: relu(0) @ zero-padded wb rows == 0
+        xraw = jnp.pad(
+            xraw.astype(jnp.float32), ((0, plan.bp - b), (0, lp0.fp - lp0.f))
+        )
+
+    h_codes, h_raw = codes, xraw
+    y = None
+    boundary_codes = []
+    for li, (lp, lw) in enumerate(zip(plan.layers, layers)):
+        noise = psum_noises[li] if psum_noises is not None else None
+        y, nxt_codes = _run_layer(
+            h_codes,
+            h_raw if lp.residual_raw else None,
+            lw["lut"], lw["wc"], lw["wb"],
+            lp, plan.bp,
+            interpret=interpret,
+            psum_noise=noise,
+        )
+        if nxt_codes is not None:
+            boundary_codes.append(nxt_codes[: plan.b, : lp.o])
+        h_codes, h_raw = nxt_codes, y
+    out = y[: plan.b, : plan.layers[-1].o]
+    if return_intermediates:
+        return out, tuple(boundary_codes)
+    return out
 
 
 @functools.partial(
     jax.jit, static_argnames=("plan", "interpret", "return_intermediates")
 )
 def kan_pipeline(
-    codes: jax.Array,        # (B, F0) int32 — entry activation codes
-    xraw: jax.Array | None,  # (B, F0) f32 raw entry input (residual_raw only)
-    layers: tuple,           # per-layer dicts: {"lut", "wc", "wb"} PADDED
+    codes: jax.Array,
+    xraw: jax.Array | None,
+    layers: tuple,
     plan: PipelinePlan,
     *,
     interpret: bool = False,
@@ -350,32 +421,12 @@ def kan_pipeline(
     layer handed to the next (sliced to logical shapes) — the conformance
     tests assert these are bit-identical to the layered reference's
     re-quantization.
-    """
-    lp0 = plan.layers[0]
-    b = codes.shape[0]
-    assert b == plan.b, (b, plan.b)
-    codes = jnp.pad(codes, ((0, plan.bp - b), (0, lp0.fp - lp0.f)))
-    if lp0.residual_raw:
-        # padded raw lanes are zero: relu(0) @ zero-padded wb rows == 0
-        xraw = jnp.pad(
-            xraw.astype(jnp.float32), ((0, plan.bp - b), (0, lp0.fp - lp0.f))
-        )
 
-    h_codes, h_raw = codes, xraw
-    y = None
-    boundary_codes = []
-    for lp, lw in zip(plan.layers, layers):
-        y, nxt_codes = _run_layer(
-            h_codes,
-            h_raw if lp.residual_raw else None,
-            lw["lut"], lw["wc"], lw["wb"],
-            lp, plan.bp,
-            interpret=interpret,
-        )
-        if nxt_codes is not None:
-            boundary_codes.append(nxt_codes[: plan.b, : lp.o])
-        h_codes, h_raw = nxt_codes, y
-    out = y[: plan.b, : plan.layers[-1].o]
-    if return_intermediates:
-        return out, tuple(boundary_codes)
-    return out
+    This is the standalone entry point; the serving/deploy surfaces go
+    through ``repro.runtime``, which wraps :func:`kan_pipeline_impl` in
+    per-bucket cached jits instead.
+    """
+    return kan_pipeline_impl(
+        codes, xraw, layers, plan,
+        interpret=interpret, return_intermediates=return_intermediates,
+    )

@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --requests 8 --slots 4
+    # the paper's datapath, with hardware non-idealities:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --kan-ffn --backend acim
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
@@ -22,6 +26,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--kan-ffn", action="store_true")
+    ap.add_argument(
+        "--backend", default=None, choices=("ref", "pallas", "acim"),
+        help="KAN executor backend (with --kan-ffn); default resolves via "
+             "REPRO_KAN_BACKEND, then 'pallas'",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
@@ -31,20 +40,30 @@ def main():
         raise SystemExit("serve demo supports decoder-only archs")
     params = init_params(jax.random.PRNGKey(0), cfg)
     # --kan-ffn serves the paper's datapath: FFN blocks are ASP-quantized at
-    # startup and every prefill/decode step runs them through the fused
-    # kan_spline Pallas pipeline (interpret mode auto-selected off-TPU).
+    # startup and every prefill/decode step resolves its executor through
+    # repro.runtime (interpret mode auto-selected off-TPU); --backend acim
+    # additionally injects the measured RRAM-ACIM non-idealities.
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
-                         kan_deploy=args.kan_ffn)
+                         kan_deploy=args.kan_ffn, kan_backend=args.backend)
 
     rng = jax.random.PRNGKey(1)
     reqs = []
     for rid in range(args.requests):
         rng, k = jax.random.split(rng)
-        prompt = jax.random.randint(k, (8,), 3, cfg.vocab_size).tolist()
+        plen = int(4 + jax.random.randint(k, (), 0, 9))  # mixed-length stream
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
         reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
     results = engine.run(reqs, log=print)
+    wall = time.perf_counter() - t0
     total = sum(len(r.output) for r in results)
-    print(f"served {len(results)} requests / {total} tokens")
+    stats = engine.compile_stats()
+    print(f"served {len(results)} requests / {total} tokens "
+          f"({total / wall:.1f} tok/s)")
+    print(f"compiles: prefill={stats['prefill_traces']} "
+          f"decode={stats['decode_traces']}; "
+          f"kan plan cache: {stats['plan_cache']}")
 
 
 if __name__ == "__main__":

@@ -151,8 +151,15 @@ def init_cache(p, cfg: ModelConfig, batch: int, max_len: int):
     return init_stack_cache(cfg, p["decoder"], batch, max_len, enc_len=enc_len)
 
 
-def prefill(p, batch, cfg: ModelConfig, max_len: int):
-    """Process the prompt; returns (last-token logits, filled cache)."""
+def prefill(p, batch, cfg: ModelConfig, max_len: int, last_index=None):
+    """Process the prompt; returns (last-token logits, filled cache).
+
+    ``last_index``: optional (B,) int32 of the last REAL token position per
+    row — the serving engine pads prompts to power-of-two length buckets
+    (one compile per bucket instead of per length) and reads the first-token
+    logits at the true prompt end instead of the padded one.  Passed as a
+    traced array so varying it never retraces.
+    """
     tokens = batch["tokens"]
     b, s = tokens.shape
     h = _embed_tokens(p, tokens, cfg)
@@ -166,7 +173,13 @@ def prefill(p, batch, cfg: ModelConfig, max_len: int):
     h, cache = stack_prefill(p["decoder"], cache, h, cfg, positions=positions,
                              enc_out=enc_out)
     h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
-    return _lm_logits(p, h[:, -1:, :], cfg)[:, 0], cache
+    if last_index is None:
+        sel = h[:, -1:, :]
+    else:
+        n_prefix = h.shape[1] - s
+        idx = (n_prefix + last_index).astype(jnp.int32)
+        sel = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    return _lm_logits(p, sel, cfg)[:, 0], cache
 
 
 def decode_step(p, cache, token, pos, cfg: ModelConfig):

@@ -1,0 +1,65 @@
+"""Backend-pluggable KAN runtime: executor registry + plan/compile cache.
+
+The single dispatch point for every quantized-KAN execution surface.  See
+:mod:`repro.runtime.executor` (the ``ref`` / ``pallas`` / ``acim`` backends,
+``REPRO_KAN_BACKEND`` resolution) and :mod:`repro.runtime.plancache` (batch
+bucketing + the LRU of compiled applies).
+
+    from repro import runtime
+    y = runtime.execute(dep, x)                      # resolved backend
+    y = runtime.execute(dep, x, backend="acim",      # paper non-idealities
+                        key=jax.random.PRNGKey(0))
+"""
+
+from .executor import (
+    ACIMExecutor,
+    ENV_BACKEND_VAR,
+    PallasExecutor,
+    RefExecutor,
+    available_backends,
+    default_interpret,
+    get_executor,
+    quiet_cim_config,
+    ref_composition,
+    register_executor,
+    resolve_backend,
+    use_backend,
+)
+from .plancache import PLAN_CACHE, PlanCache, PlanKey, bucket_batch
+
+__all__ = [
+    "ACIMExecutor",
+    "ENV_BACKEND_VAR",
+    "PLAN_CACHE",
+    "PallasExecutor",
+    "PlanCache",
+    "PlanKey",
+    "RefExecutor",
+    "available_backends",
+    "bucket_batch",
+    "cache_stats",
+    "default_interpret",
+    "execute",
+    "get_executor",
+    "quiet_cim_config",
+    "ref_composition",
+    "register_executor",
+    "reset_cache",
+    "resolve_backend",
+    "use_backend",
+]
+
+
+def execute(dep, x, *, backend=None, default="pallas", **opts):
+    """Run a deployed KAN bundle through the resolved backend."""
+    return get_executor(backend, default=default)(dep, x, **opts)
+
+
+def cache_stats() -> dict:
+    """Hit/miss/trace counters of the process-wide plan cache."""
+    return PLAN_CACHE.stats()
+
+
+def reset_cache() -> None:
+    """Drop all cached plans/compiled applies and zero the counters."""
+    PLAN_CACHE.clear()

@@ -1,0 +1,440 @@
+"""Executor protocol + registry: the single dispatch point for KAN inference.
+
+Every execution surface (``kan_network_apply(quantized=True)``,
+``kan_ffn_apply_quantized``, ``ServeEngine(kan_deploy=True)``,
+``launch.serve``) resolves its backend here instead of carrying its own
+``backend=`` strings and ``default_interpret()`` probes.  Three registered
+backends run the same deployed bundle (duck-typed: ``.dims``, ``.specs``,
+``.layers`` (padded {"lut","wc","wb"}), ``.residual_raw``):
+
+  * ``"ref"``    — the layered jnp composition (moved here from
+                   ``kan_network_apply_ref``): per-layer SH-LUT dense basis,
+                   banded matmul, tanh-rescale + re-quantize boundary.  The
+                   bit-exactness oracle for the other two.
+  * ``"pallas"`` — the fused multi-layer Pallas pipeline
+                   (``kernels.kan_spline.pipeline``), int codes across layer
+                   boundaries, one jit per (geometry, bucket).
+  * ``"acim"``   — the fused pipeline with the paper's RRAM-ACIM
+                   non-idealities injected at the banded-MAC contraction:
+                   TM-DV input-generator noise on the entry codes
+                   (:func:`repro.core.tmdv.apply_input_noise`), systematic
+                   IR-drop attenuation of the conductance rows, and the
+                   per-array partial-sum sigma folded into each output tile
+                   — all seeded by an explicit PRNG key, so runs reproduce.
+
+Backend selection precedence: explicit argument > :func:`use_backend` scope
+> ``REPRO_KAN_BACKEND`` env var > the call site's default.  All backends
+share the :mod:`plancache` (batch bucketing + LRU of compiled applies).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.asp_quant import dense_basis_from_codes, quantize_input
+from ..core.cim import CIMConfig
+from ..core.tmdv import TMDVConfig, apply_input_noise
+from ..kernels.kan_spline.pipeline import kan_pipeline_impl
+from .plancache import PLAN_CACHE, PlanKey, bucket_batch
+
+__all__ = [
+    "ENV_BACKEND_VAR",
+    "default_interpret",
+    "register_executor",
+    "available_backends",
+    "resolve_backend",
+    "get_executor",
+    "use_backend",
+    "quiet_cim_config",
+    "RefExecutor",
+    "PallasExecutor",
+    "ACIMExecutor",
+]
+
+ENV_BACKEND_VAR = "REPRO_KAN_BACKEND"
+
+
+def default_interpret() -> bool:
+    """Pallas kernels need interpret mode off-TPU (CPU containers, CI)."""
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------------
+# Registry + resolution
+# ----------------------------------------------------------------------------
+
+_EXECUTORS: dict = {}
+# innermost use_backend() override; a ContextVar so concurrent engines on
+# different threads (or async tasks) cannot clobber each other's scope
+_SCOPE_BACKEND: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_kan_backend_scope", default=None
+)
+
+
+def register_executor(name: str, executor) -> None:
+    _EXECUTORS[name] = executor
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_EXECUTORS))
+
+
+def resolve_backend(backend: str | None = None, *,
+                    default: str = "pallas") -> str:
+    """Resolve a backend name; raises ValueError for unknown names."""
+    if backend is None or backend == "auto":
+        backend = _SCOPE_BACKEND.get()
+    if backend is None:
+        backend = os.environ.get(ENV_BACKEND_VAR, "").strip() or None
+    if backend is None:
+        backend = default
+    if backend not in _EXECUTORS:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: {available_backends()}"
+        )
+    return backend
+
+
+def get_executor(backend: str | None = None, *, default: str = "pallas"):
+    return _EXECUTORS[resolve_backend(backend, default=default)]
+
+
+@contextlib.contextmanager
+def use_backend(backend: str | None):
+    """Scoped backend override (beats the env var, loses to explicit args).
+
+    ``None`` is a no-op passthrough so callers can plumb an optional choice.
+    """
+    if backend is not None and backend not in _EXECUTORS:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: {available_backends()}"
+        )
+    token = _SCOPE_BACKEND.set(
+        backend if backend is not None else _SCOPE_BACKEND.get()
+    )
+    try:
+        yield
+    finally:
+        _SCOPE_BACKEND.reset(token)
+
+
+# ----------------------------------------------------------------------------
+# Shared helpers
+# ----------------------------------------------------------------------------
+
+
+def _entry_codes(dep, x, xraw):
+    """Entry coding, identical across backends (and to the PR-1 contract):
+    KAN stacks quantize x directly; FFN stacks (residual_raw) quantize
+    tanh(x) and keep the raw activation for the ReLU branch."""
+    spec0 = dep.specs[0]
+    if dep.residual_raw:
+        xraw = x.astype(jnp.float32) if xraw is None else xraw
+        codes = quantize_input(jnp.tanh(xraw), spec0)
+    else:
+        codes = quantize_input(x, spec0)
+        xraw = None
+    return codes, xraw
+
+
+def _logical_layer(lw: dict, lp) -> tuple:
+    """Slice one padded deployed layer back to its logical (lut, wc, wb)."""
+    nb = lp.spec.num_basis
+    wc = lw["wc"].reshape(lp.fp, nb, lp.op)[: lp.f, :, : lp.o]
+    wb = lw["wb"][: lp.f, : lp.o]
+    return lw["lut"], wc, wb
+
+
+def _pad_batch(a, bucket):
+    if a is None:
+        return None
+    return jnp.pad(a, ((0, bucket - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
+
+
+def _slice_result(out, b, return_intermediates):
+    if return_intermediates:
+        y, codes = out
+        return y[:b], tuple(c[:b] for c in codes)
+    return out[:b]
+
+
+class _CachedExecutor:
+    """Common plancache plumbing: bucket, pad, look up, run, slice.
+
+    Subclasses customize via three hooks: ``_flags(**opts)`` (backend
+    statics that belong in the cache key), ``_build(plan_key)`` (the
+    per-entry jitted apply), and ``_run(...)`` (how the apply is invoked).
+    """
+
+    name = "?"
+
+    def _flags(self, **opts) -> tuple:
+        return ()
+
+    def _build(self, key: PlanKey):
+        raise NotImplementedError
+
+    def __call__(self, dep, x, *, xraw=None, interpret=None, key=None,
+                 return_intermediates=False, **opts):
+        if interpret is None:
+            interpret = default_interpret()
+        codes, xraw = _entry_codes(dep, x, xraw)
+        b = codes.shape[0]
+        bucket = bucket_batch(b)
+        plan_key = PlanKey(
+            dims=tuple(dep.dims),
+            specs=tuple(dep.specs),
+            bucket=bucket,
+            residual_raw=dep.residual_raw,
+            interpret=interpret,
+            backend=self.name,
+            flags=self._flags(**opts),
+        )
+        _, apply = PLAN_CACHE.get(plan_key, self._build)
+        out = self._run(apply, _pad_batch(codes, bucket),
+                        _pad_batch(xraw, bucket), dep.layers, key,
+                        return_intermediates)
+        return _slice_result(out, b, return_intermediates)
+
+    def _run(self, apply, codes, xraw, layers, key, return_intermediates):
+        return apply(codes, xraw, layers,
+                     return_intermediates=return_intermediates)
+
+
+# ----------------------------------------------------------------------------
+# "ref": the layered jnp composition
+# ----------------------------------------------------------------------------
+
+
+def ref_composition(logical_layers, specs, codes, xraw, *,
+                    residual_raw: bool, return_intermediates: bool = False):
+    """Layered quantized composition over logical (lut, wc, wb) triples.
+
+    Bit-identical to the PR-1 ``kan_layer_apply_quantized`` + tanh-rescale
+    chain (same op order, same constants) — the oracle the Pallas pipeline's
+    boundary codes are asserted against.
+    """
+    n = len(logical_layers)
+    boundary = []
+    y = None
+    for li, (lut, wc, wb) in enumerate(logical_layers):
+        spec = specs[li]
+        basis = dense_basis_from_codes(codes, lut, spec)
+        b = codes.shape[0]
+        f, nb, o = wc.shape
+        y = basis.reshape(b, f * nb) @ wc.reshape(f * nb, o)
+        if residual_raw:
+            resid = jax.nn.relu(xraw)
+        else:
+            resid = jax.nn.relu(
+                spec.lo + codes.astype(jnp.float32) * spec.code_step
+            )
+        y = y + resid @ wb
+        if li < n - 1:
+            nxt = specs[li + 1]
+            if residual_raw:
+                xraw = y
+                codes = quantize_input(jnp.tanh(y), nxt)
+            else:
+                h = jnp.tanh(y) * (0.5 * (nxt.hi - nxt.lo)) \
+                    + 0.5 * (nxt.hi + nxt.lo)
+                codes = quantize_input(h, nxt)
+            boundary.append(codes)
+    if return_intermediates:
+        return y, tuple(boundary)
+    return y
+
+
+class RefExecutor(_CachedExecutor):
+    name = "ref"
+
+    def _build(self, key: PlanKey):
+        plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
+                               residual_raw=key.residual_raw)
+
+        @functools.partial(jax.jit, static_argnames=("return_intermediates",))
+        def apply(codes, xraw, layers, return_intermediates=False):
+            PLAN_CACHE.record_trace()
+            logical = [_logical_layer(lw, lp)
+                       for lw, lp in zip(layers, plan.layers)]
+            return ref_composition(
+                logical, key.specs, codes, xraw,
+                residual_raw=key.residual_raw,
+                return_intermediates=return_intermediates,
+            )
+
+        return plan, apply
+
+
+# ----------------------------------------------------------------------------
+# "pallas": the fused pipeline
+# ----------------------------------------------------------------------------
+
+
+class PallasExecutor(_CachedExecutor):
+    name = "pallas"
+
+    def _build(self, key: PlanKey):
+        plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
+                               residual_raw=key.residual_raw)
+
+        @functools.partial(jax.jit, static_argnames=("return_intermediates",))
+        def apply(codes, xraw, layers, return_intermediates=False):
+            PLAN_CACHE.record_trace()
+            return kan_pipeline_impl(
+                codes, xraw, layers, plan,
+                interpret=key.interpret,
+                return_intermediates=return_intermediates,
+            )
+
+        return plan, apply
+
+
+# ----------------------------------------------------------------------------
+# "acim": the fused pipeline + RRAM-ACIM non-idealities
+# ----------------------------------------------------------------------------
+
+
+def quiet_cim_config() -> CIMConfig:
+    """A CIMConfig with every non-ideality zeroed (bit-exact vs "pallas")."""
+    return CIMConfig(
+        ir_gamma=0.0,
+        sigma_ps_ref=0.0,
+        input_gen=TMDVConfig(sigma_v_ref=0.0, sigma_t=0.0),
+    )
+
+
+def _irdrop_row_gain(lp, cfg: CIMConfig) -> np.ndarray | None:
+    """Static per-row conductance gain (Fp*NB, 1), or None when IR-drop is off.
+
+    Mirrors ``core.cim.cim_matmul``'s systematic term at typical column load
+    (col_load == 1): physical row p of each array attenuates by
+    ``ir_scale * (p+1)/rows``; deployment calibration divides out the
+    mean-distance attenuation, leaving the placement-dependent residual.
+    Logical rows map to physical positions in natural banded order
+    (feature-major, as the weights are flattened); zero-padded rows past the
+    logical row count keep gain 1 (they hold no conductance).
+    """
+    ir = cfg.ir_scale()
+    if ir == 0.0:
+        return None
+    rows = cfg.array_rows
+    nb = lp.spec.num_basis
+    n_logical = lp.f * nb
+    r = np.arange(lp.fp * nb)
+    dist = ((r % rows) + 1.0) / rows
+    factor = 1.0 - ir * dist
+    comp = 1.0 - ir * (rows + 1.0) / (2.0 * rows)
+    gain = np.where(r < n_logical, factor / comp, 1.0)
+    return gain.astype(np.float32)[:, None]
+
+
+def _n_arrays(lp, cfg: CIMConfig) -> int:
+    """Physical macro count one output column's MAC spans."""
+    return max(1, -(-(lp.f * lp.spec.num_basis) // cfg.array_rows))
+
+
+@dataclasses.dataclass
+class ACIMExecutor(_CachedExecutor):
+    """Fused pipeline with measured non-idealities at the MAC contraction.
+
+    The injection points (all gated so a zeroed config traces the exact same
+    program as "pallas"):
+
+      * entry codes -> :func:`apply_input_noise` (TM-DV voltage/time sigma),
+        re-rounded to the nearest valid ASP code;
+      * conductance rows -> systematic IR-drop gain (mean-compensated, as on
+        the calibrated 22nm prototype);
+      * each (batch, out) tile -> additive Gaussian partial-sum error with
+        per-channel std ``sigma_ps * sqrt(n_arrays) * x_max * lut_lsb *
+        w_lsb[o]`` — the float-domain image of ``cim_matmul``'s code-domain
+        sigma, accumulated over the arrays a column spans.  Injected on the
+        first contraction step, so the fused boundary requantizer propagates
+        the error to the next layer's int codes.
+
+    ``key`` seeds every stochastic term; the same key reproduces the run.
+    When no key is supplied (e.g. the serving path, where ``ffn`` has no key
+    plumbing), a default key is folded with a digest of the entry codes, so
+    distinct layers/steps/tokens draw decorrelated noise while staying fully
+    deterministic for identical inputs.
+    """
+
+    cim: CIMConfig = dataclasses.field(
+        default_factory=lambda: CIMConfig(ir_gamma=0.06, sigma_ps_ref=0.05)
+    )
+    name: str = dataclasses.field(default="acim", init=False)
+
+    def _flags(self, cim: CIMConfig | None = None, **_opts) -> tuple:
+        return ("cim", self.cim if cim is None else cim)
+
+    def _run(self, apply, codes, xraw, layers, key, return_intermediates):
+        if key is None:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(0), jnp.sum(codes, dtype=jnp.uint32)
+            )
+        return apply(codes, xraw, layers, key,
+                     return_intermediates=return_intermediates)
+
+    def _build(self, key: PlanKey):
+        cfg = key.flags[1]
+        plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
+                               residual_raw=key.residual_raw)
+        spec0 = key.specs[0]
+        tm = cfg.input_gen
+        has_input_noise = (not cfg.deterministic) and (
+            tm.sigma_v > 0.0 or tm.sigma_t > 0.0
+        )
+        has_psum = (not cfg.deterministic) and cfg.sigma_ps_ref > 0.0
+        x_max = float(2 ** spec0.lut_bits - 1)
+        row_gains = tuple(_irdrop_row_gain(lp, cfg) for lp in plan.layers)
+
+        @functools.partial(jax.jit, static_argnames=("return_intermediates",))
+        def apply(codes, xraw, layers, noise_key, return_intermediates=False):
+            PLAN_CACHE.record_trace()
+            if has_input_noise:
+                noise_key, k_in = jax.random.split(noise_key)
+                eff = apply_input_noise(codes, tm, k_in)
+                codes = jnp.clip(
+                    jnp.floor(eff + 0.5).astype(jnp.int32),
+                    0, spec0.num_codes - 1,
+                )
+            acim_layers = []
+            noises = [] if has_psum else None
+            for li, (lp, lw) in enumerate(zip(plan.layers, layers)):
+                wc = lw["wc"]
+                if has_psum:
+                    # per-channel weight LSB recovered from the dequantized
+                    # int8 storage (max |w| maps to code 127); padded output
+                    # channels have zero weights -> zero sigma, keeping the
+                    # padded lanes noiseless.
+                    w_lsb = jnp.max(jnp.abs(wc), axis=0) / 127.0
+                    lut_lsb = jnp.max(lw["lut"]) / x_max
+                    std = (cfg.sigma_ps() * np.sqrt(_n_arrays(lp, cfg))
+                           * x_max * lut_lsb) * w_lsb
+                    noise_key, k_ps = jax.random.split(noise_key)
+                    noises.append(std[None, :] * jax.random.normal(
+                        k_ps, (plan.bp, lp.op), jnp.float32))
+                if row_gains[li] is not None:
+                    wc = wc * jnp.asarray(row_gains[li])
+                acim_layers.append({**lw, "wc": wc})
+            return kan_pipeline_impl(
+                codes, xraw, tuple(acim_layers), plan,
+                interpret=key.interpret,
+                psum_noises=tuple(noises) if noises is not None else None,
+                return_intermediates=return_intermediates,
+            )
+
+        return plan, apply
+
+
+register_executor("ref", RefExecutor())
+register_executor("pallas", PallasExecutor())
+register_executor("acim", ACIMExecutor())

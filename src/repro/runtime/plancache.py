@@ -1,0 +1,137 @@
+"""Batch-bucketed plan + compiled-executor cache (the runtime's memo layer).
+
+Every execution surface used to rebuild its :class:`PipelinePlan` and retrace
+the fused jit for every distinct batch size (``DeployedKAN.replan`` per call,
+``ServeEngine`` per prompt length).  This module centralizes that:
+
+  * **bucketing** — a logical batch ``b`` is rounded up to the next power of
+    two (:func:`bucket_batch`); inputs are zero-padded to the bucket and the
+    output sliced back.  Rows are independent through the whole datapath
+    (the MAC contracts the feature axis only), so padding is bit-invisible
+    to the real rows.  A ragged request stream therefore compiles O(log B)
+    executor variants instead of O(#distinct batch sizes).
+
+  * **LRU cache** — ``(dims, specs, bucket, residual_raw, interpret,
+    backend, flags) -> (PipelinePlan, compiled apply)``.  The compiled apply
+    is a per-entry ``jax.jit`` closure over the static plan, so evicting an
+    entry releases its executable.  Backend-specific statics (e.g. the acim
+    :class:`~repro.core.cim.CIMConfig`, whose sigmas are baked into the
+    traced program) ride in ``flags``.
+
+  * **observability** — hit/miss/trace counters (`stats`), used by the
+    recompile-count tests and the benchmark's cache report.  ``traces``
+    increments inside the jitted python body, i.e. exactly once per real
+    retrace, which is what the ragged-batch test asserts on.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+
+__all__ = ["bucket_batch", "PlanKey", "PlanCache", "PLAN_CACHE"]
+
+
+def bucket_batch(b: int, lo: int = 8) -> int:
+    """Round a logical batch up to the next power of two (>= ``lo``)."""
+    if b < 1:
+        raise ValueError(f"batch must be >= 1, got {b}")
+    p = lo
+    while p < b:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Hashable identity of one compiled executor variant."""
+
+    dims: tuple
+    specs: tuple            # per-layer ASPQuantSpec (frozen dataclasses)
+    bucket: int             # padded batch (power of two)
+    residual_raw: bool
+    interpret: bool
+    backend: str
+    flags: tuple = ()       # backend statics (e.g. ("cim", CIMConfig(...)))
+
+
+class PlanCache:
+    """LRU of PlanKey -> (PipelinePlan, compiled apply) with counters."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+
+    # -- compiled-executor entries --------------------------------------
+
+    def get(self, key: PlanKey, builder):
+        """Return the cached (plan, apply) for ``key``; build on miss.
+
+        ``builder(key)`` must return the ``(plan, apply)`` pair; ``apply``
+        should bump :attr:`traces` from inside its traced python body so the
+        counter reflects actual retraces, not cache misses.
+        """
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return entry
+            self.misses += 1
+            entry = builder(key)
+            self._entries[key] = entry
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+            return entry
+
+    def record_trace(self) -> None:
+        """Called from inside a jitted apply body: one real (re)trace."""
+        self.traces += 1
+
+    # -- plan-only lookups (DeployedKAN.replan) -------------------------
+
+    def plan(self, batch: int, dims: tuple, specs: tuple, *,
+             residual_raw: bool = False):
+        """Memoized ``make_pipeline_plan`` — replan becomes a dict lookup."""
+        from ..kernels.kan_spline.pipeline import make_pipeline_plan
+
+        key = (batch, tuple(dims), tuple(specs), residual_raw)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                plan = make_pipeline_plan(
+                    batch, tuple(dims), tuple(specs), residual_raw=residual_raw
+                )
+                self._plans[key] = plan
+                while len(self._plans) > 4 * self.maxsize:
+                    self._plans.popitem(last=False)
+            else:
+                self._plans.move_to_end(key)
+            return plan
+
+    # -- stats ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "traces": self.traces,
+                "entries": len(self._entries),
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._plans.clear()
+            self.hits = self.misses = self.traces = 0
+
+
+# The process-wide cache every executor resolves through.
+PLAN_CACHE = PlanCache()

@@ -7,6 +7,21 @@ max_tokens) are immediately refilled from the queue — the standard
 continuous-batching loop (vLLM-style, without paging) on top of
 models.model.{prefill, decode_step}.
 
+Compile behavior: decode compiles once; prefill pads prompts to
+power-of-two length buckets so a mixed-length request stream compiles
+O(log L) variants instead of one per distinct prompt length.  Padding lives
+at the END of the prompt (causal attention means real positions never see
+it), is zeroed out of the cache at splice time, and first-token logits are
+read at the true last-token index — so bucketed and exact prefill emit the
+same tokens.  Bucketing is enabled automatically for pure global-attention
+decoders; recurrent/SSM/sliding-window stacks fall back to exact-length
+prefill (their states integrate the pad tokens).
+
+When ``kan_deploy=True`` every KAN-FFN block executes through the
+``repro.runtime`` registry (``kan_backend`` > ``REPRO_KAN_BACKEND`` >
+"pallas"), sharing the runtime's plan/compile cache across prefill and
+decode.
+
 On CPU/smoke configs this is a functional demo; the same engine drives the
 decode_32k serve_step that the dry-run lowers at production shapes.
 """
@@ -23,8 +38,21 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import model as M
+from .. import runtime
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "prefill_bucketing_supported"]
+
+
+def prefill_bucketing_supported(cfg: ModelConfig) -> bool:
+    """Right-padded prefill is exact only when no layer state integrates the
+    pad tokens: pure global-attention decoders qualify (causal masking +
+    masked cache splice make padding invisible); sliding-window caches,
+    RG-LRU/SSD states, and encoder/VLM prefixes do not."""
+    return (
+        cfg.encoder_layers == 0
+        and cfg.family not in ("audio", "vlm")
+        and all(k == "global" for k in cfg.layer_kinds)
+    )
 
 
 @dataclasses.dataclass
@@ -42,15 +70,19 @@ class Request:
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
-                 kan_deploy: bool = False):
+                 kan_deploy: bool = False, kan_backend: str | None = None,
+                 prefill_buckets: bool | None = None):
         if kan_deploy:
             # Execute every KAN-FFN block on the paper's quantized datapath:
-            # int8 c' + SH-LUT through the fused kan_spline Pallas pipeline
+            # int8 c' + SH-LUT through the repro.runtime executor registry
             # (decode AND prefill steps — the whole serving hot path).
             if cfg.ffn_kind != "kan":
                 raise ValueError(
                     "kan_deploy requires a KAN-FFN config (cfg.kan_variant())"
                 )
+            # validate eagerly so a typo'd backend fails at engine build,
+            # not at first admit
+            runtime.resolve_backend(kan_backend)
             from ..core.kan_ffn_deploy import quantize_kan_ffn_params_tree
 
             params = quantize_kan_ffn_params_tree(params, cfg)
@@ -59,22 +91,32 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        self.kan_backend = kan_backend if kan_deploy else None
+        if prefill_buckets is None:
+            prefill_buckets = prefill_bucketing_supported(cfg)
+        self.prefill_buckets = prefill_buckets and prefill_bucketing_supported(cfg)
         self.cache = M.init_cache(params, cfg, slots, max_len)
         self.pos = np.zeros(slots, np.int32)
         self.active: list[Request | None] = [None] * slots
         self._t0 = {}
+        self.prefill_traces = 0
+        self.decode_traces = 0
 
         cfg_ = cfg
+        eng = self
 
         @jax.jit
         def _decode(params, cache, token, pos):
+            eng.decode_traces += 1  # python body runs only while tracing
             return M.decode_step(params, cache, token, pos, cfg_)
 
         self._decode = _decode
 
         @jax.jit
-        def _prefill_one(params, tokens):
-            return M.prefill(params, {"tokens": tokens}, cfg_, max_len=max_len)
+        def _prefill_one(params, tokens, last_index):
+            eng.prefill_traces += 1
+            return M.prefill(params, {"tokens": tokens}, cfg_,
+                             max_len=max_len, last_index=last_index)
 
         self._prefill_one = _prefill_one
 
@@ -86,16 +128,40 @@ class ServeEngine:
                 return i
         return None
 
+    def _padded_prompt(self, prompt: list) -> list:
+        """Right-pad to the power-of-two length bucket (token 0 as filler)."""
+        if not self.prefill_buckets:
+            return list(prompt)
+        lb = runtime.bucket_batch(len(prompt))
+        if lb > self.max_len - 1:
+            return list(prompt)
+        return list(prompt) + [0] * (lb - len(prompt))
+
     def _admit(self, req: Request):
         slot = self._free_slot()
         assert slot is not None
+        plen = len(req.prompt)
         # prefill the request alone (B=1), splice its cache into the pool
-        tokens = jnp.asarray([req.prompt], jnp.int32)
-        logits, cache1 = self._prefill_one(self.params, tokens)
-        self.cache = jax.tree.map(
-            lambda pool, one: pool.at[:, slot].set(one[:, 0]), self.cache, cache1
-        )
-        self.pos[slot] = len(req.prompt)
+        tokens = jnp.asarray([self._padded_prompt(req.prompt)], jnp.int32)
+        with runtime.use_backend(self.kan_backend):
+            logits, cache1 = self._prefill_one(
+                self.params, tokens, jnp.asarray([plen - 1], jnp.int32)
+            )
+        # mask the padding in the cache splice: KV written past the real
+        # prompt (pad tokens) is zeroed so no stale state enters the pool.
+        tmask = jnp.arange(self.max_len) < plen
+
+        def splice(pool, one):
+            one = one[:, 0]                      # (repeats, T, H, D)
+            if (self.prefill_buckets and one.ndim >= 2
+                    and one.shape[1] == self.max_len):
+                one = jnp.where(
+                    tmask.reshape((1, -1) + (1,) * (one.ndim - 2)), one, 0
+                )
+            return pool.at[:, slot].set(one)
+
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+        self.pos[slot] = plen
         first = int(jnp.argmax(logits[0]))
         req.output.append(first)
         self.active[slot] = req
@@ -115,10 +181,11 @@ class ServeEngine:
             for i, r in enumerate(self.active):
                 if r is not None:
                     tokens[i] = r.output[-1]
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(self.pos),
-            )
+            with runtime.use_backend(self.kan_backend):
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.pos),
+                )
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for i, r in enumerate(self.active):
                 if r is None:
@@ -135,3 +202,11 @@ class ServeEngine:
                     log(f"request {r.rid} done ({len(r.output)} tokens, "
                         f"{r.latency_s:.2f}s)")
         return results
+
+    def compile_stats(self) -> dict:
+        """Engine-level trace counts + the runtime plan-cache counters."""
+        return {
+            "prefill_traces": self.prefill_traces,
+            "decode_traces": self.decode_traces,
+            "plan_cache": runtime.cache_stats(),
+        }

@@ -97,6 +97,93 @@ def test_serve_engine_kan_deploy_rejects_non_kan_config():
         ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
 
 
+def test_serve_engine_rejects_unknown_kan_backend():
+    from repro.serve.engine import ServeEngine
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                    kan_backend="tpu-magic")
+
+
+def test_prefill_length_buckets_compile_once_per_bucket_same_tokens():
+    """Prompt padding to power-of-two buckets: a mixed-length request stream
+    compiles O(log L) prefill variants instead of one per distinct length,
+    and (masked cache splice + true-last-token logits) decodes the SAME
+    tokens as exact-length prefill."""
+    from repro.serve.engine import Request, ServeEngine, \
+        prefill_bucketing_supported
+
+    cfg = smoke_config("qwen2.5-14b")
+    assert prefill_bucketing_supported(cfg)  # pure global attention
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lengths = [3, 5, 6, 7, 9, 12]
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(7)
+        reqs = []
+        for rid, ln in enumerate(lengths):
+            rng, k = jax.random.split(rng)
+            prompt = jax.random.randint(k, (ln,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+        return reqs
+
+    bucketed = ServeEngine(params, cfg, slots=2, max_len=64)
+    assert bucketed.prefill_buckets
+    out_b = {r.rid: r.output for r in bucketed.run(make_reqs())}
+
+    exact = ServeEngine(params, cfg, slots=2, max_len=64,
+                        prefill_buckets=False)
+    out_e = {r.rid: r.output for r in exact.run(make_reqs())}
+
+    assert out_b == out_e
+    # lengths {3,5,6,7} -> bucket 8; {9,12} -> bucket 16
+    assert bucketed.prefill_traces == 2, bucketed.compile_stats()
+    assert exact.prefill_traces == len(set(lengths))
+    assert bucketed.decode_traces == 1
+
+
+def test_prefill_bucketing_auto_disabled_for_stateful_stacks():
+    """Recurrent/SSM/windowed stacks integrate pad tokens into their state —
+    the engine must fall back to exact-length prefill for them."""
+    from repro.serve.engine import prefill_bucketing_supported
+    from repro.serve.engine import ServeEngine
+
+    for name in ("mamba2-370m", "recurrentgemma-9b", "gemma2-27b"):
+        cfg = smoke_config(name)
+        assert not prefill_bucketing_supported(cfg), name
+    cfg = smoke_config("mamba2-370m")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, slots=2, max_len=32)
+    assert not eng.prefill_buckets  # even though the default asks for it
+
+
+def test_serve_engine_kan_backend_ref_matches_pallas_tokens():
+    """kan_backend plumbs through repro.runtime: the layered "ref" executor
+    and the fused "pallas" executor serve identical greedy tokens."""
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(11)
+        reqs = []
+        for rid in range(2):
+            rng, k = jax.random.split(rng)
+            prompt = jax.random.randint(k, (5,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+        return reqs
+
+    outs = {}
+    for backend in ("ref", "pallas"):
+        eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                          kan_backend=backend)
+        outs[backend] = {r.rid: r.output for r in eng.run(make_reqs())}
+    assert outs["ref"] == outs["pallas"]
+
+
 def test_rolling_window_cache_exceeding_window():
     """Decode past the window: rolling cache must equal full SWA attention."""
     cfg = smoke_config("mixtral-8x7b")
