@@ -19,12 +19,15 @@ transformer-FFN width (the qwen2.5-14b smoke KAN-FFN geometry).  Each row
 also reports executor throughput (rows through the KAN per second) and the
 run ends with the runtime plan-cache hit/miss/trace counters plus a small
 end-to-end served-tokens/s measurement of the continuous-batching engine on
-the fused datapath.  Off-TPU the Pallas path runs in interpret mode — those
-numbers validate plumbing, not TPU perf (same caveat as benchmarks/run.py's
-kernel microbench).
+the fused datapath.  ``--tuned`` adds a heuristic-plan vs tuned-plan leg:
+``repro.tune.tiles`` sweeps tile geometries for each config (measured on
+TPU, deterministic cost proxy in interpret mode), registers the winner with
+the plan cache, and the fused executor is re-timed on it.  Off-TPU the
+Pallas path runs in interpret mode — those numbers validate plumbing, not
+TPU perf (same caveat as benchmarks/run.py's kernel microbench).
 
     PYTHONPATH=src python benchmarks/bench_kan_pipeline.py --out BENCH_kan_pipeline.json
-    PYTHONPATH=src python benchmarks/bench_kan_pipeline.py --smoke   # CI step
+    PYTHONPATH=src python benchmarks/bench_kan_pipeline.py --smoke --tuned  # CI step
 """
 
 from __future__ import annotations
@@ -113,7 +116,8 @@ def _bench_serve(requests: int, max_new: int, print_fn=print) -> dict:
 
 
 def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
-        serve_max_new: int = 8, print_fn=print) -> dict:
+        serve_max_new: int = 8, tuned: bool = False,
+        tile_candidates: int = 10, print_fn=print) -> dict:
     interpret = default_interpret()
     runtime.reset_cache()
     rows = []
@@ -151,8 +155,34 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
         row["acim_vs_fused_max_err"] = float(
             jnp.abs(acim_fn(x) - fused_fn(x)).max()
         )
+        if tuned:
+            # heuristic-plan vs tuned-plan fused execution.  The tile tuner
+            # registers its winner with the plan cache (warm-traced inside
+            # the tuner), so the same fused_fn transparently runs the tuned
+            # geometry afterwards; off-TPU the tuner ranks by its
+            # deterministic proxy and typically keeps the heuristic.
+            from repro.tune import tune_tiles
+
+            tile = tune_tiles(dep, batch=batch, interpret=interpret,
+                              max_candidates=tile_candidates)
+            mean_us, min_us = _time_fn(fused_fn, x, repeats)
+            row["fused_tuned_us"] = mean_us
+            row["fused_tuned_min_us"] = min_us
+            row["tile_mode"] = tile.mode
+            row["tile_trials"] = len(tile.trials)
+            row["tile_tuned"] = tile.tuned
+            row["tile_overrides"] = (
+                None if tile.chosen_overrides is None
+                else [list(t) for t in tile.chosen_overrides]
+            )
+            # exactness is a tuner invariant; assert it held end to end
+            err_t = float(jnp.abs(fused_fn(x) - ref_fn(x)).max())
+            assert err_t == err, (err_t, err)
+            runtime.PLAN_CACHE.set_tile_overrides(
+                tuple(dep.dims), tuple(dep.specs), dep.residual_raw, None
+            )
         rows.append(row)
-        print_fn(
+        msg = (
             f"{name},float_us={row['float_us']:.0f},"
             f"quant_ref_us={row['quant_ref_us']:.0f},"
             f"fused_pallas_us={row['fused_pallas_us']:.0f},"
@@ -160,6 +190,11 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
             f"fused_tok_s={row['fused_tokens_per_s']:.0f},"
             f"err={err:.2e}"
         )
+        if tuned:
+            msg += (f",fused_tuned_us={row['fused_tuned_us']:.0f},"
+                    f"tile_mode={row['tile_mode']},"
+                    f"tile_tuned={int(row['tile_tuned'])}")
+        print_fn(msg)
     serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn)
     cache = runtime.cache_stats()  # after the serve leg: it shares the cache
     print_fn(f"plan_cache,{cache}")
@@ -179,12 +214,17 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=10)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: small batch/repeats, short serve leg")
+    ap.add_argument("--tuned", action="store_true",
+                    help="add the heuristic-vs-tuned tile-plan leg "
+                         "(repro.tune.tiles) to every config")
     ap.add_argument("--out", default="BENCH_kan_pipeline.json")
     args = ap.parse_args()
     if args.smoke:
-        result = run(batch=32, repeats=2, serve_requests=2, serve_max_new=4)
+        result = run(batch=32, repeats=2, serve_requests=2, serve_max_new=4,
+                     tuned=args.tuned, tile_candidates=6)
     else:
-        result = run(batch=args.batch, repeats=args.repeats)
+        result = run(batch=args.batch, repeats=args.repeats,
+                     tuned=args.tuned)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

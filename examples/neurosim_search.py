@@ -1,6 +1,8 @@
-"""KAN-NeuroSim hyperparameter search (paper §3.4, Fig. 9):
+"""KAN-NeuroSim hyperparameter search (paper §3.4, Fig. 9) via ``repro.tune``.
 
-step 1 — find the largest grid G whose accelerator fits the hardware budget;
+step 1 — Pareto search over the design space under each hardware budget
+         (the old ad-hoc max-G loop, generalized: the same constraint check
+         and cost model, but searching every knob and returning a front);
 step 2 — grid-extension training under the budget with ACIM-aware eval.
 
     PYTHONPATH=src python examples/neurosim_search.py [--fast]
@@ -9,10 +11,10 @@ step 2 — grid-extension training under the budget with ACIM-aware eval.
 import argparse
 
 from repro.core.neurosim import (
-    HardwareConstraints, grid_extension_train, search_max_grid,
+    HardwareConstraints, evaluate_accuracy, grid_extension_train,
 )
 from repro.data.knot import make_knot_dataset
-from repro.core.neurosim import evaluate_accuracy
+from repro.tune import DesignSpace, SearchConfig, pareto_search
 
 
 def main():
@@ -27,11 +29,33 @@ def main():
         "moderate (KAN2-like)": HardwareConstraints(
             max_area_mm2=0.065, max_energy_pj=420, max_latency_ns=900),
     }
+    # step 1: cost-only design-space search (task=None -> no training), the
+    # repro.tune generalization of the old search_max_grid loop: same cost
+    # model + constraint check, but over G AND the TM-DV split, returning a
+    # Pareto front instead of one max-G point.
+    space = DesignSpace(
+        grid_size=(3, 5, 8, 12, 16, 24, 32, 48, 68),
+        voltage_bits=(3, 4, 5),
+        array_rows=(128,),
+        use_sam=(False,),  # SAM is cost-free; only meaningful with a task
+    )
     for name, hc in budgets.items():
-        g, cost = search_max_grid(dims, hc)
-        print(f"[{name}] step 1: max G = {g}  "
-              f"(area {cost['area_mm2']:.4f} mm^2, {cost['energy_pj']:.0f} pJ, "
-              f"{cost['latency_ns']:.0f} ns)" if g else f"[{name}] infeasible")
+        res = pareto_search(
+            None, space, constraints=hc, dims=dims,
+            config=SearchConfig(budget=40, n_init=16, seed=0),
+        )
+        feas = [p for p in res.evaluated if p.feasible]
+        if not feas:
+            print(f"[{name}] infeasible")
+            continue
+        gmax = max(p.candidate.grid_size for p in feas)
+        print(f"[{name}] step 1: {len(res.front)} Pareto points, "
+              f"max feasible G = {gmax}")
+        for p in res.front[:4]:
+            c, m = p.candidate, p.metrics
+            print(f"    G={c.grid_size:>2} vb={c.voltage_bits} "
+                  f"area {m['area_mm2']:.4f} mm^2  {m['energy_pj']:.0f} pJ  "
+                  f"{m['latency_ns']:.0f} ns")
 
     n = 8192 if args.fast else 16384
     xt, yt, xv, yv = make_knot_dataset(n, 2048, seed=0, label_noise=0.04)

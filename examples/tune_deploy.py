@@ -1,0 +1,114 @@
+"""End-to-end co-design tuning: search -> tile tune -> artifact -> deploy.
+
+Runs the full ``repro.tune`` flow on the paper's KAN1 knot task:
+
+  1. train the base network once, Pareto-search the design space under a
+     KAN1-like hardware budget (cost model + acim-backend accuracy);
+  2. pick an operating point off the front, deploy it, and tile-tune the
+     fused Pallas pipeline for its geometry;
+  3. dump a versioned tuning artifact, then RELOAD it into a cold runtime
+     (caches cleared) and verify the deployment reproduces bit-identically
+     — the file, not the search, is the deployment input from here on.
+
+    PYTHONPATH=src python examples/tune_deploy.py [--smoke] [--out X.json]
+
+Exit status is non-zero if the search returns an empty front or the
+reloaded deployment mismatches — which is what the CI tuner smoke job
+asserts on.  To serve an LM on the tuned point afterwards:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --kan-ffn --tuned-config TUNE_artifact.json
+"""
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro import runtime, tune
+from repro.core.kan_network_deploy import kan_network_deploy_apply
+from repro.core.neurosim import HardwareConstraints
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny budgets for CI: small task, few evals")
+    ap.add_argument("--out", default="TUNE_artifact.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # -- 1. task + search -------------------------------------------------
+    if args.smoke:
+        task = tune.make_knot_task(n_train=4096, n_val=512, epochs=60,
+                                   seed=args.seed)
+        space = tune.DesignSpace(grid_size=(3, 5, 8),
+                                 voltage_bits=(3, 4, 5),
+                                 array_rows=(128,))
+        cfg = tune.SearchConfig(budget=10, n_init=4, seed=args.seed)
+    else:
+        task = tune.make_knot_task(n_train=8192, n_val=1024, epochs=120,
+                                   seed=args.seed)
+        space = tune.DesignSpace()
+        cfg = tune.SearchConfig(budget=32, n_init=8, seed=args.seed)
+    hc = HardwareConstraints(max_area_mm2=0.02, max_energy_pj=300,
+                             max_latency_ns=900)
+    result = tune.pareto_search(task, space, constraints=hc, config=cfg)
+    print(f"search: {result.n_evals} evals, {len(result.front)} Pareto "
+          f"points (space {result.space_hash}, seed {result.seed})")
+    if not result.front:
+        print("ERROR: empty Pareto front", file=sys.stderr)
+        return 1
+    base = result.baseline
+    print(f"baseline: acc={base.metrics['accuracy']:.3f} "
+          f"energy={base.metrics['energy_pj']:.0f} pJ")
+    for p in result.front:
+        c, m = p.candidate, p.metrics
+        print(f"  front: G={c.grid_size} K={c.order} vb={c.voltage_bits} "
+              f"sam={int(c.use_sam)} -> acc={m['accuracy']:.3f} "
+              f"energy={m['energy_pj']:.0f} pJ area={m['area_mm2']:.4f} mm^2")
+    dom = result.dominating_baseline(on=("energy_pj", "accuracy"))
+    print(f"{len(dom)} front points dominate the un-searched default on "
+          "(energy, accuracy)")
+
+    # -- 2. choose + deploy + tile-tune ----------------------------------
+    chosen = tune.select_point(result.front)
+    print(f"chosen: {chosen.candidate}")
+    kspec, _, dep = tune.deploy_candidate(task, chosen.candidate)
+    tile = tune.tune_tiles(dep, max_candidates=6 if args.smoke else 16,
+                           seed=args.seed)
+    print(f"tile tuner: mode={tile.mode}, {len(tile.trials)} trials, "
+          f"plan source now: {'tuned' if tile.tuned else 'heuristic'}")
+    x_probe = jax.random.uniform(jax.random.PRNGKey(args.seed + 1),
+                                 (64, task.dims[0]), minval=-1.0, maxval=1.0)
+    y_tuned = np.asarray(kan_network_deploy_apply(dep, x_probe))
+
+    # -- 3. artifact round trip ------------------------------------------
+    art = tune.build_tuning_artifact(search=result, chosen=chosen, tile=tile,
+                                     task=task.name)
+    tune.save_tuning_artifact(args.out, art)
+    print(f"wrote {args.out}")
+
+    runtime.reset_cache()  # cold runtime: the file is all we have
+    loaded = tune.load_tuning_artifact(args.out)
+    resolved = tune.apply_tuning_artifact(loaded)
+    cand2 = resolved["candidate"]
+    if cand2 != chosen.candidate:
+        print("ERROR: reloaded candidate differs", file=sys.stderr)
+        return 1
+    if resolved["plan"] != tile.chosen_plan:
+        print("ERROR: reloaded plan differs", file=sys.stderr)
+        return 1
+    _, _, dep2 = tune.deploy_candidate(task, cand2)
+    y_reloaded = np.asarray(kan_network_deploy_apply(dep2, x_probe))
+    if not np.array_equal(y_tuned, y_reloaded):
+        print("ERROR: reloaded deployment is not bit-identical",
+              file=sys.stderr)
+        return 1
+    print("artifact round trip OK: reloaded deployment is bit-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,6 +42,7 @@ __all__ = [
     "kan_layer_apply_quantized",
     "init_kan_network",
     "kan_network_apply",
+    "refit_layer_spec",
     "extend_layer_grid",
     "param_count",
 ]
@@ -230,22 +231,36 @@ def param_count(kspec: KANSpec) -> int:
 # ----------------------------------------------------------------------------
 
 
-def extend_layer_grid(params, old_spec: ASPQuantSpec, new_g: int) -> dict:
-    """Refit layer coefficients on a finer grid by least squares.
+def refit_layer_spec(
+    params, old_spec: ASPQuantSpec, new_spec: ASPQuantSpec
+) -> dict:
+    """Refit layer coefficients onto a different (G, K) basis by least squares.
 
-    Samples the old spline densely, solves for new coefficients such that the
-    new-G spline matches — the standard grid-extension transfer.  w_b is
-    unchanged.
+    Samples the old spline densely, solves for new coefficients such that
+    the new-spec spline matches — the standard grid-extension transfer,
+    generalized to arbitrary target grid size AND order so the co-design
+    search (``repro.tune``) can score candidate (G, K) points from one
+    trained base network without retraining per candidate.  Refitting to a
+    finer grid is near-lossless; to a coarser grid it is the best L2
+    approximation — exactly the fidelity/cost trade-off being searched.
+    w_b is unchanged.
     """
-    new_spec = dataclasses.replace(old_spec, grid_size=new_g)
+    new_g, new_k = new_spec.grid_size, new_spec.order
     xs = jnp.linspace(
-        old_spec.lo, old_spec.hi, 4 * (new_g + new_spec.order) + 16, dtype=jnp.float32
+        old_spec.lo, old_spec.hi, 4 * (new_g + new_k) + 16, dtype=jnp.float32
     )
     old_b = bspline_basis(xs, old_spec.lo, old_spec.hi, old_spec.grid_size, old_spec.order)
-    new_b = bspline_basis(xs, new_spec.lo, new_spec.hi, new_g, new_spec.order)
+    new_b = bspline_basis(xs, new_spec.lo, new_spec.hi, new_g, new_k)
     c = params["c"]  # (F, nb_old, O)
     f, nb_old, o = c.shape
     targets = jnp.einsum("sn,fno->sfo", old_b, c).reshape(len(xs), f * o)
     sol, *_ = jnp.linalg.lstsq(new_b, targets)
-    c_new = sol.reshape(new_g + new_spec.order, f, o).transpose(1, 0, 2)
+    c_new = sol.reshape(new_g + new_k, f, o).transpose(1, 0, 2)
     return {"c": c_new, "w_b": params["w_b"]}
+
+
+def extend_layer_grid(params, old_spec: ASPQuantSpec, new_g: int) -> dict:
+    """Refit layer coefficients on a finer grid by least squares (same K)."""
+    return refit_layer_spec(
+        params, old_spec, dataclasses.replace(old_spec, grid_size=new_g)
+    )

@@ -122,16 +122,19 @@ def kan_network_deploy_apply(
     backend: str | None = None,
     key=None,
     cim=None,
+    sam_perms=None,
     return_intermediates: bool = False,
 ):
     """Run float input x (B, F0) through the runtime-resolved backend.
 
     ``backend=None`` resolves via the runtime (scope > ``REPRO_KAN_BACKEND``
-    env var > "pallas").  ``key``/``cim`` only matter for the acim backend.
+    env var > "pallas").  ``key``/``cim``/``sam_perms`` only matter for the
+    acim backend (``sam_perms``: per-layer KAN-SAM row placements).
     """
     return runtime.execute(
         dep, x, backend=backend, default="pallas",
         xraw=xraw, interpret=interpret, key=key, cim=cim,
+        sam_perms=sam_perms,
         return_intermediates=return_intermediates,
     )
 

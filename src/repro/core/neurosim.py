@@ -44,6 +44,7 @@ from ..train.optimizer import adamw, apply_updates
 __all__ = [
     "HardwareConstraints",
     "check_constraints",
+    "kan_cost",
     "search_max_grid",
     "train_kan",
     "evaluate_accuracy",
@@ -59,11 +60,21 @@ class HardwareConstraints:
     max_latency_ns: float = float("inf")
 
 
-def _cost_for(dims, grid_size, order, n_bits, input_gen, array_rows, adc_bits):
+def kan_cost(dims, grid_size, order, n_bits, input_gen, array_rows=128,
+             adc_bits=8) -> dict:
+    """Accelerator cost of one KAN hyperparameter point (area/energy/latency).
+
+    The single cost hook shared by the step-1 constraint loop here and the
+    Pareto search in ``repro.tune.search``.  Raises ``ValueError`` when G
+    does not fit the bit budget (eq. (6)).
+    """
     spec = ASPQuantSpec(grid_size=grid_size, order=order, n_bits=n_bits,
                         lut_bits=n_bits, lo=-1.0, hi=1.0)
     acc = kan_accelerator(dims, spec, input_gen, array_rows, adc_bits)
     return accelerator_cost(acc)
+
+
+_cost_for = kan_cost  # internal alias kept for the step-2 loop below
 
 
 def check_constraints(cost: dict, hc: HardwareConstraints) -> bool:

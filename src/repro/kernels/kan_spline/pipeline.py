@@ -50,6 +50,8 @@ __all__ = [
     "LayerPlan",
     "PipelinePlan",
     "make_pipeline_plan",
+    "normalize_tile_overrides",
+    "validate_plan",
     "pad_layer_weights",
     "kan_pipeline",
     "kan_pipeline_impl",
@@ -105,6 +107,31 @@ class PipelinePlan:
 _BASIS_TILE_BUDGET = 4 * 1024 * 1024
 
 
+def _is_pow2(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+def normalize_tile_overrides(tile_overrides, n_layers: int) -> tuple | None:
+    """Canonicalize tile overrides to a per-layer ((bb, bo, bf), ...) tuple.
+
+    Accepts a single (bb, bo, bf) triple (broadcast to every layer) or a
+    per-layer sequence of triples.  ``bb`` must agree across layers — the
+    batch pad ``bp`` is shared by the whole stack.
+    """
+    if tile_overrides is None:
+        return None
+    ov = tuple(tile_overrides)
+    if len(ov) == 3 and all(not hasattr(v, "__len__") for v in ov):
+        ov = tuple((int(ov[0]), int(ov[1]), int(ov[2])) for _ in range(n_layers))
+    else:
+        ov = tuple((int(b), int(o), int(f)) for b, o, f in ov)
+    if len(ov) != n_layers:
+        raise ValueError(f"{len(ov)} tile overrides for {n_layers} layers")
+    if len({b for b, _, _ in ov}) != 1:
+        raise ValueError(f"per-layer bb must agree (shared batch pad): {ov}")
+    return ov
+
+
 def make_pipeline_plan(
     batch: int,
     dims: tuple,
@@ -113,17 +140,33 @@ def make_pipeline_plan(
     residual_raw: bool = False,
     max_block_b: int = 128,
     max_block_f: int = 128,
+    tile_overrides=None,
 ) -> PipelinePlan:
     """Choose block sizes + padded dims for a whole stack from shapes alone.
 
     dims: (F0, O0=F1, O1=F2, ...) — len(dims) == n_layers + 1.
     specs: per-layer ASPQuantSpec, len == n_layers.
+
+    ``tile_overrides`` (from ``repro.tune.tiles`` / the plan cache's tuned
+    registry) replaces the heuristic block sizes with explicit per-layer
+    ``(bb, bo, bf)`` triples.  Overrides change ONLY the tiling of the grid,
+    never the padded dims ``fp``/``op`` — deployed weight bundles padded
+    under the heuristic plan stay valid verbatim under any tuned plan, and
+    the 128-padded inter-layer boundary contract is untouched.  Invalid
+    overrides (non-power-of-two, not dividing the padded dim, basis tile
+    over the VMEM budget) raise ``ValueError``.
     """
     n_layers = len(dims) - 1
     if len(specs) != n_layers:
         raise ValueError(f"{len(specs)} specs for {n_layers} layers")
+    overrides = normalize_tile_overrides(tile_overrides, n_layers)
 
     bb = min(max_block_b, _round_up(batch, 8))
+    if overrides is not None:
+        bb = overrides[0][0]
+        if bb < 8 or bb % 8:
+            raise ValueError(f"bb override must be a multiple of 8 >= 8: {bb}")
+        bb = min(bb, _round_up(batch, 8))
     bp = _round_up(batch, bb)
 
     layers = []
@@ -142,6 +185,22 @@ def make_pipeline_plan(
         bo = 128
         fp = _round_up(f, bf) if li == 0 else _round_up(f, 128)
         op = _round_up(o, bo)
+        if overrides is not None:
+            _, bo_c, bf_c = overrides[li]
+            if not (_is_pow2(bo_c) and 8 <= bo_c <= 128 and op % bo_c == 0):
+                raise ValueError(
+                    f"layer {li}: bo override {bo_c} invalid for op={op}"
+                )
+            if not (_is_pow2(bf_c) and 8 <= bf_c <= 128 and fp % bf_c == 0):
+                raise ValueError(
+                    f"layer {li}: bf override {bf_c} invalid for fp={fp}"
+                )
+            if bb * bf_c * nb * 4 > _BASIS_TILE_BUDGET:
+                raise ValueError(
+                    f"layer {li}: basis tile {bb}x{bf_c}x{nb} exceeds the "
+                    "VMEM budget"
+                )
+            bo, bf = bo_c, bf_c
         layers.append(
             LayerPlan(
                 spec=spec,
@@ -152,6 +211,44 @@ def make_pipeline_plan(
             )
         )
     return PipelinePlan(b=batch, bp=bp, layers=tuple(layers))
+
+
+def validate_plan(plan: PipelinePlan) -> None:
+    """Assert every geometric invariant the fused executor relies on.
+
+    Raises ``ValueError`` on the first violation.  Used by the tile
+    autotuner to reject candidate geometries before they are ever compiled,
+    and by the tests as the single source of truth for plan validity.
+    """
+    if not plan.layers:
+        raise ValueError("plan has no layers")
+    if plan.bp < plan.b:
+        raise ValueError(f"padded batch {plan.bp} < logical batch {plan.b}")
+    prev_op = None
+    for li, lp in enumerate(plan.layers):
+        nb = lp.spec.num_basis
+        if plan.bp % lp.bb:
+            raise ValueError(f"layer {li}: bp={plan.bp} not divisible by bb={lp.bb}")
+        if lp.fp % lp.bf:
+            raise ValueError(f"layer {li}: fp={lp.fp} not divisible by bf={lp.bf}")
+        if lp.op % lp.bo:
+            raise ValueError(f"layer {li}: op={lp.op} not divisible by bo={lp.bo}")
+        if lp.fp < lp.f or lp.op < lp.o:
+            raise ValueError(f"layer {li}: padded dims below logical dims")
+        if prev_op is not None and lp.fp != prev_op:
+            raise ValueError(
+                f"layer {li}: boundary mismatch fp={lp.fp} != prev op={prev_op}"
+            )
+        if lp.emit_codes and lp.op % 128:
+            raise ValueError(
+                f"layer {li}: boundary op={lp.op} not 128-padded"
+            )
+        if lp.bb * lp.bf * nb * 4 > _BASIS_TILE_BUDGET:
+            raise ValueError(
+                f"layer {li}: basis tile {lp.bb}x{lp.bf}x{nb} exceeds the "
+                "VMEM budget"
+            )
+        prev_op = lp.op
 
 
 def pad_layer_weights(wc: jax.Array, wb: jax.Array, lp: LayerPlan) -> dict:

@@ -5,11 +5,16 @@
     # the paper's datapath, with hardware non-idealities:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --kan-ffn --backend acim
+    # deploy a repro.tune co-design artifact (quantization point + tuned
+    # tile plan applied at startup):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --kan-ffn --tuned-config TUNE_artifact.json
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -31,9 +36,33 @@ def main():
         help="KAN executor backend (with --kan-ffn); default resolves via "
              "REPRO_KAN_BACKEND, then 'pallas'",
     )
+    ap.add_argument(
+        "--tuned-config", default=None, metavar="PATH",
+        help="repro.tune artifact to deploy: applies its chosen "
+             "quantization point to the KAN-FFN config and registers its "
+             "tuned tile plan with the runtime plan cache",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
+    tuned_note = ""
+    if args.tuned_config:
+        from ..tune import apply_tuning_artifact, load_tuning_artifact
+
+        art = load_tuning_artifact(args.tuned_config)
+        resolved = apply_tuning_artifact(art)
+        cand = resolved["candidate"]
+        if cand is not None:
+            # the chosen co-design point becomes the KAN-FFN quantization
+            cfg = dataclasses.replace(
+                cfg, kan_grid=cand.grid_size, kan_order=cand.order,
+                kan_n_bits=cand.n_bits,
+            )
+        tuned_note = (
+            f" [artifact {args.tuned_config}: task={art.get('task')}, "
+            f"seed={art.get('seed')}, space={art.get('space_hash')}, "
+            f"tile mode={None if not art.get('tile_plan') else art['tile_plan'].get('mode')}]"
+        )
     if args.kan_ffn:
         cfg = cfg.kan_variant()
     if cfg.family in ("audio",):
@@ -45,6 +74,10 @@ def main():
     # additionally injects the measured RRAM-ACIM non-idealities.
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
                          kan_deploy=args.kan_ffn, kan_backend=args.backend)
+    if args.kan_ffn:
+        print(f"kan-ffn: G={cfg.kan_grid} K={cfg.kan_order} "
+              f"n_bits={cfg.kan_n_bits}, plan source: "
+              f"{engine.kan_plan_source()}{tuned_note}")
 
     rng = jax.random.PRNGKey(1)
     reqs = []

@@ -336,7 +336,7 @@ def init_ffn(key, cfg: ModelConfig):
         }
     if cfg.ffn_kind == "kan":
         nb = cfg.kan_grid + cfg.kan_order
-        h = cfg.kan_d_hidden or max(1, cfg.d_ff // nb)
+        h = kan_ffn_hidden(cfg)
         # KANLinear pair: d -> h -> d; c:(in, nb, out), w_b:(in, out)
         return {
             "c1": jax.random.normal(ks[0], (d, nb, h), dt) * (0.1 / math.sqrt(d)),
@@ -354,6 +354,14 @@ def kan_ffn_spec(cfg: ModelConfig) -> ASPQuantSpec:
         grid_size=cfg.kan_grid, order=cfg.kan_order, n_bits=cfg.kan_n_bits,
         lut_bits=cfg.kan_n_bits, lo=-1.0, hi=1.0,
     )
+
+
+def kan_ffn_hidden(cfg: ModelConfig) -> int:
+    """KANLinear hidden width of a KAN-FFN block — the ONE place the rule
+    lives; init_ffn and every geometry lookup (e.g. the serving engine's
+    tuned-plan-source check) must agree on it."""
+    nb = cfg.kan_grid + cfg.kan_order
+    return cfg.kan_d_hidden or max(1, cfg.d_ff // nb)
 
 
 def _bump_basis_and_grad(z, lo, hi, grid_size, order):

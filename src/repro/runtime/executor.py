@@ -312,15 +312,18 @@ def quiet_cim_config() -> CIMConfig:
     )
 
 
-def _irdrop_row_gain(lp, cfg: CIMConfig) -> np.ndarray | None:
+def _irdrop_row_gain(lp, cfg: CIMConfig, perm=None) -> np.ndarray | None:
     """Static per-row conductance gain (Fp*NB, 1), or None when IR-drop is off.
 
     Mirrors ``core.cim.cim_matmul``'s systematic term at typical column load
     (col_load == 1): physical row p of each array attenuates by
     ``ir_scale * (p+1)/rows``; deployment calibration divides out the
     mean-distance attenuation, leaving the placement-dependent residual.
-    Logical rows map to physical positions in natural banded order
-    (feature-major, as the weights are flattened); zero-padded rows past the
+    By default logical rows map to physical positions in natural banded
+    order (feature-major, as the weights are flattened); ``perm`` — a
+    KAN-SAM placement with ``perm[p] = logical row at physical position p``
+    (see ``core.sam.sam_permutation``) — relocates each logical row's
+    IR-drop exposure to its SAM slot instead.  Zero-padded rows past the
     logical row count keep gain 1 (they hold no conductance).
     """
     ir = cfg.ir_scale()
@@ -330,7 +333,19 @@ def _irdrop_row_gain(lp, cfg: CIMConfig) -> np.ndarray | None:
     nb = lp.spec.num_basis
     n_logical = lp.f * nb
     r = np.arange(lp.fp * nb)
-    dist = ((r % rows) + 1.0) / rows
+    if perm is None:
+        pos = r
+    else:
+        perm = np.asarray(perm)
+        if perm.shape != (n_logical,):
+            raise ValueError(
+                f"sam perm has {perm.shape} entries; layer has {n_logical} "
+                "logical rows"
+            )
+        inv = np.empty(n_logical, np.int64)
+        inv[perm] = np.arange(n_logical)
+        pos = np.where(r < n_logical, inv[np.minimum(r, n_logical - 1)], r)
+    dist = ((pos % rows) + 1.0) / rows
     factor = 1.0 - ir * dist
     comp = 1.0 - ir * (rows + 1.0) / (2.0 * rows)
     gain = np.where(r < n_logical, factor / comp, 1.0)
@@ -352,7 +367,10 @@ class ACIMExecutor(_CachedExecutor):
       * entry codes -> :func:`apply_input_noise` (TM-DV voltage/time sigma),
         re-rounded to the nearest valid ASP code;
       * conductance rows -> systematic IR-drop gain (mean-compensated, as on
-        the calibrated 22nm prototype);
+        the calibrated 22nm prototype); an optional per-layer KAN-SAM
+        placement (``sam_perms=``, see ``core.sam``) relocates each row's
+        IR-drop exposure to its mapped physical slot, so the co-design
+        search can score SAM on/off on the same fused backend;
       * each (batch, out) tile -> additive Gaussian partial-sum error with
         per-channel std ``sigma_ps * sqrt(n_arrays) * x_max * lut_lsb *
         w_lsb[o]`` — the float-domain image of ``cim_matmul``'s code-domain
@@ -372,8 +390,17 @@ class ACIMExecutor(_CachedExecutor):
     )
     name: str = dataclasses.field(default="acim", init=False)
 
-    def _flags(self, cim: CIMConfig | None = None, **_opts) -> tuple:
-        return ("cim", self.cim if cim is None else cim)
+    def _flags(self, cim: CIMConfig | None = None, sam_perms=None,
+               **_opts) -> tuple:
+        flags = ("cim", self.cim if cim is None else cim)
+        if sam_perms is not None:
+            # per-layer KAN-SAM placements (or None to keep natural order);
+            # tuples so the cache key stays hashable
+            flags += ("sam", tuple(
+                None if p is None else tuple(int(i) for i in np.asarray(p))
+                for p in sam_perms
+            ))
+        return flags
 
     def _run(self, apply, codes, xraw, layers, key, return_intermediates):
         if key is None:
@@ -385,6 +412,9 @@ class ACIMExecutor(_CachedExecutor):
 
     def _build(self, key: PlanKey):
         cfg = key.flags[1]
+        sam_perms = None
+        if len(key.flags) >= 4 and key.flags[2] == "sam":
+            sam_perms = key.flags[3]
         plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
                                residual_raw=key.residual_raw)
         spec0 = key.specs[0]
@@ -394,7 +424,12 @@ class ACIMExecutor(_CachedExecutor):
         )
         has_psum = (not cfg.deterministic) and cfg.sigma_ps_ref > 0.0
         x_max = float(2 ** spec0.lut_bits - 1)
-        row_gains = tuple(_irdrop_row_gain(lp, cfg) for lp in plan.layers)
+        row_gains = tuple(
+            _irdrop_row_gain(
+                lp, cfg, perm=sam_perms[li] if sam_perms is not None else None
+            )
+            for li, lp in enumerate(plan.layers)
+        )
 
         @functools.partial(jax.jit, static_argnames=("return_intermediates",))
         def apply(codes, xraw, layers, noise_key, return_intermediates=False):

@@ -22,6 +22,14 @@ the fused jit for every distinct batch size (``DeployedKAN.replan`` per call,
     recompile-count tests and the benchmark's cache report.  ``traces``
     increments inside the jitted python body, i.e. exactly once per real
     retrace, which is what the ragged-batch test asserts on.
+
+  * **tuned tile plans** — ``repro.tune.tiles`` registers measured
+    ``(bb, bo, bf)`` winners per ``(dims, specs, residual_raw)`` geometry
+    (:meth:`PlanCache.set_tile_overrides`); :meth:`PlanCache.plan` applies
+    them when building plans, so ``DeployedKAN.replan``, the executors and
+    the serving path all pick the tuned geometry up transparently.
+    Registering (or clearing) overrides invalidates the matching cached
+    plans/compiled entries so no consumer keeps serving the stale geometry.
 """
 
 from __future__ import annotations
@@ -63,6 +71,7 @@ class PlanCache:
         self.maxsize = maxsize
         self._entries: collections.OrderedDict = collections.OrderedDict()
         self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._tile_overrides: dict = {}
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
@@ -98,15 +107,24 @@ class PlanCache:
 
     def plan(self, batch: int, dims: tuple, specs: tuple, *,
              residual_raw: bool = False):
-        """Memoized ``make_pipeline_plan`` — replan becomes a dict lookup."""
+        """Memoized ``make_pipeline_plan`` — replan becomes a dict lookup.
+
+        Applies any tuned tile overrides registered for this geometry, so
+        every consumer that resolves plans through the cache transparently
+        runs on the tuned block sizes.
+        """
         from ..kernels.kan_spline.pipeline import make_pipeline_plan
 
         key = (batch, tuple(dims), tuple(specs), residual_raw)
         with self._lock:
             plan = self._plans.get(key)
             if plan is None:
+                overrides = self._tile_overrides.get(
+                    (tuple(dims), tuple(specs), residual_raw)
+                )
                 plan = make_pipeline_plan(
-                    batch, tuple(dims), tuple(specs), residual_raw=residual_raw
+                    batch, tuple(dims), tuple(specs),
+                    residual_raw=residual_raw, tile_overrides=overrides,
                 )
                 self._plans[key] = plan
                 while len(self._plans) > 4 * self.maxsize:
@@ -114,6 +132,51 @@ class PlanCache:
             else:
                 self._plans.move_to_end(key)
             return plan
+
+    # -- tuned tile-plan registry (repro.tune.tiles) --------------------
+
+    def set_tile_overrides(self, dims: tuple, specs: tuple,
+                           residual_raw: bool, overrides) -> None:
+        """Register (or with ``overrides=None`` clear) a tuned tile plan.
+
+        ``overrides`` is a per-layer ``((bb, bo, bf), ...)`` tuple (see
+        ``kernels.kan_spline.pipeline.make_pipeline_plan``).  Cached plans
+        and compiled entries for the geometry are invalidated so the next
+        resolution rebuilds on the tuned blocks; the tile tuner re-warms the
+        hot entry right after registration so consumers keep hitting the
+        cache without a retrace of their own.
+        """
+        from ..kernels.kan_spline.pipeline import normalize_tile_overrides
+
+        gkey = (tuple(dims), tuple(specs), bool(residual_raw))
+        with self._lock:
+            if overrides is None:
+                if gkey not in self._tile_overrides:
+                    return  # nothing registered: clearing must not invalidate
+                del self._tile_overrides[gkey]
+            else:
+                self._tile_overrides[gkey] = normalize_tile_overrides(
+                    overrides, len(dims) - 1
+                )
+            for k in [k for k in self._plans
+                      if (k[1], k[2], k[3]) == gkey]:
+                del self._plans[k]
+            for k in [k for k in self._entries
+                      if (k.dims, k.specs, k.residual_raw) == gkey]:
+                del self._entries[k]
+
+    def get_tile_overrides(self, dims: tuple, specs: tuple,
+                           residual_raw: bool):
+        """The registered tuned tile plan for a geometry, or None."""
+        with self._lock:
+            return self._tile_overrides.get(
+                (tuple(dims), tuple(specs), bool(residual_raw))
+            )
+
+    def tile_overrides(self) -> dict:
+        """Snapshot of every registered tuned tile plan (for reporting)."""
+        with self._lock:
+            return dict(self._tile_overrides)
 
     # -- stats ----------------------------------------------------------
 
@@ -130,6 +193,7 @@ class PlanCache:
         with self._lock:
             self._entries.clear()
             self._plans.clear()
+            self._tile_overrides.clear()
             self.hits = self.misses = self.traces = 0
 
 

@@ -210,3 +210,22 @@ class ServeEngine:
             "decode_traces": self.decode_traces,
             "plan_cache": runtime.cache_stats(),
         }
+
+    def kan_plan_source(self) -> str | None:
+        """Where the KAN-FFN pipeline geometry comes from.
+
+        "tuned" when a ``repro.tune`` tile plan is registered for this
+        engine's FFN geometry (e.g. loaded from a ``--tuned-config``
+        artifact), "heuristic" for the built-in block-size heuristic, None
+        when the engine is not serving a KAN-FFN deployment.
+        """
+        if self.cfg.ffn_kind != "kan":
+            return None
+        from ..models.layers import kan_ffn_hidden, kan_ffn_spec
+
+        spec = kan_ffn_spec(self.cfg)
+        d = self.cfg.d_model
+        ov = runtime.PLAN_CACHE.get_tile_overrides(
+            (d, kan_ffn_hidden(self.cfg), d), (spec, spec), True
+        )
+        return "tuned" if ov is not None else "heuristic"

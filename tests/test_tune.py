@@ -1,0 +1,321 @@
+"""repro.tune: co-design search, tile autotuner, tuning artifacts.
+
+Covers the subsystem's contract:
+
+  * Pareto-dominance invariants on the returned front (non-empty, mutually
+    non-dominated, covering every feasible evaluated point) and the
+    acceptance criterion that at least one searched point dominates the
+    un-searched default config on (energy, accuracy);
+  * search determinism under a fixed seed;
+  * constraint-violating candidates are recorded but never enter the front;
+  * tile-tuner validity (every retained candidate plan respects the
+    padding/divisibility invariants and is bit-exact vs the heuristic plan,
+    outputs AND boundary codes) and transparent plan-cache pickup (no
+    consumer retrace after the tuner's warm);
+  * artifact round trip: dump -> load -> identical resolved plan and
+    candidate, plus schema validation.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime, tune
+from repro.core.kan_network_deploy import kan_network_deploy_apply
+from repro.core.neurosim import HardwareConstraints
+from repro.kernels.kan_spline.pipeline import (
+    kan_pipeline,
+    make_pipeline_plan,
+    validate_plan,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    runtime.reset_cache()
+    yield
+    runtime.reset_cache()
+
+
+@pytest.fixture(scope="module")
+def task():
+    """One trained base network shared by every search in this module."""
+    return tune.make_knot_task(n_train=4096, n_val=512, epochs=60, seed=0,
+                               calib_n=128)
+
+
+SPACE = tune.DesignSpace(grid_size=(3, 5, 8), voltage_bits=(3, 4, 5),
+                         array_rows=(128,))
+
+
+@pytest.fixture(scope="module")
+def search_result(task):
+    return tune.pareto_search(
+        task, SPACE,
+        config=tune.SearchConfig(budget=12, n_init=5, seed=0, acim_seeds=2),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Pareto search
+# ----------------------------------------------------------------------------
+
+
+def test_front_is_mutually_non_dominated(search_result):
+    res = search_result
+    assert len(res.front) > 0
+    assert res.n_evals == 12
+    for p in res.front:
+        assert p.feasible
+        for q in res.front:
+            assert not tune.dominates(q.metrics, p.metrics, res.objectives)
+
+
+def test_front_covers_every_feasible_point(search_result):
+    res = search_result
+    front = set(id(p) for p in res.front)
+    for p in res.evaluated:
+        if not p.feasible or id(p) in front:
+            continue
+        assert any(
+            tune.dominates(q.metrics, p.metrics, res.objectives)
+            for q in res.front
+        ), f"{p.candidate} is neither on the front nor dominated"
+
+
+def test_some_point_dominates_the_unsearched_default(search_result):
+    """Acceptance: the search beats the shipped defaults on (energy, acc)."""
+    res = search_result
+    assert res.baseline is not None
+    assert res.baseline.candidate == tune.default_candidate()
+    dom = res.dominating_baseline(on=("energy_pj", "accuracy"))
+    assert len(dom) > 0, [p.to_dict() for p in res.front]
+
+
+def test_search_is_deterministic_under_a_fixed_seed(task):
+    cfg = tune.SearchConfig(budget=5, n_init=3, seed=7, acim_seeds=1)
+    r1 = tune.pareto_search(task, SPACE, config=cfg)
+    r2 = tune.pareto_search(task, SPACE, config=cfg)
+    assert r1.to_dict() == r2.to_dict()
+    assert [p.candidate for p in r1.evaluated] == \
+        [p.candidate for p in r2.evaluated]
+
+
+def test_constraint_violators_never_enter_the_front():
+    # cost-only mode (task=None): fast, and constraints bind on energy
+    space = tune.DesignSpace(grid_size=(3, 5, 8, 16, 32),
+                             voltage_bits=(3, 4, 5), array_rows=(128,),
+                             use_sam=(False,))
+    hc = HardwareConstraints(max_energy_pj=260.0)
+    res = tune.pareto_search(
+        None, space, constraints=hc,
+        config=tune.SearchConfig(budget=20, n_init=10, seed=1),
+    )
+    infeasible = [p for p in res.evaluated if not p.feasible]
+    assert infeasible, "constraint was never exercised"
+    for p in infeasible:
+        assert p.metrics["energy_pj"] > hc.max_energy_pj
+        assert p not in res.front
+    for p in res.front:
+        assert p.metrics["energy_pj"] <= hc.max_energy_pj
+
+
+def test_cost_only_metrics_match_the_neurosim_cost_model():
+    from repro.core.neurosim import kan_cost
+
+    cand = tune.Candidate(grid_size=8, voltage_bits=3)
+    m = tune.evaluate_candidate(None, cand, dims=(17, 1, 14))
+    ref = kan_cost((17, 1, 14), 8, 3, 8, cand.input_gen(), 128, 8)
+    for k, v in ref.items():
+        assert m[k] == v
+    assert "accuracy" not in m
+
+
+def test_sam_candidates_use_the_acim_backend_with_placement(task):
+    """SAM changes nothing but the IR-drop exposure: same cost, valid acc."""
+    base = tune.Candidate(grid_size=5, voltage_bits=4)
+    sam = dataclasses.replace(base, use_sam=True)
+    m0 = tune.evaluate_candidate(task, base, acim_seeds=1)
+    m1 = tune.evaluate_candidate(task, sam, acim_seeds=1)
+    for k in ("area_mm2", "energy_pj", "latency_ns"):
+        assert m0[k] == m1[k]
+    assert 0.0 <= m1["accuracy"] <= 1.0
+    # deterministic: same candidate, same seeds -> same accuracy
+    assert m1 == tune.evaluate_candidate(task, sam, acim_seeds=1)
+
+
+# ----------------------------------------------------------------------------
+# Tile autotuner
+# ----------------------------------------------------------------------------
+
+
+def _kan1_dep(task):
+    return tune.deploy_candidate(task, tune.Candidate(grid_size=5))
+
+
+def test_tile_candidates_valid_and_bit_exact(task):
+    _, _, dep = _kan1_dep(task)
+    res = tune.tune_tiles(dep, batch=32, max_candidates=8, seed=0,
+                          register=False)
+    kept = [t for t in res.trials if t.valid]
+    assert len(kept) >= 4
+    # every retained candidate respects the geometric invariants ...
+    for t in kept:
+        plan = make_pipeline_plan(res.bucket, res.dims, res.specs,
+                                  residual_raw=res.residual_raw,
+                                  tile_overrides=t.overrides)
+        validate_plan(plan)
+        # overrides never change the padded dims (weights stay valid)
+        for lp, hp in zip(plan.layers, res.heuristic_plan.layers):
+            assert (lp.fp, lp.op) == (hp.fp, hp.op)
+    # ... and every candidate that may win is bit-exact vs the heuristic
+    assert all(t.exact for t in kept if np.isfinite(t.score))
+    assert any(t.exact for t in kept)
+    # the chosen plan reproduces the heuristic output bit-exactly
+    x = jax.random.uniform(jax.random.PRNGKey(2), (9, res.dims[0]),
+                           minval=-1.0, maxval=1.0)
+    y_heur = kan_network_deploy_apply(dep, x, interpret=True)
+    codes = jnp.asarray(
+        np.random.default_rng(0).integers(
+            0, res.specs[0].num_codes, size=(res.bucket, res.dims[0])
+        ), jnp.int32)
+    y_a = kan_pipeline(codes, None, dep.layers, res.heuristic_plan,
+                       interpret=True)
+    y_b = kan_pipeline(codes, None, dep.layers, res.chosen_plan,
+                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_b))
+    assert y_heur.shape == (9, res.dims[-1])
+
+
+def test_invalid_tile_overrides_are_rejected():
+    spec = tune.Candidate(grid_size=5).spec()
+    with pytest.raises(ValueError):  # bo does not divide op
+        make_pipeline_plan(32, (17, 1, 14), (spec, spec),
+                           tile_overrides=(32, 96, 32))
+    with pytest.raises(ValueError):  # bf not a power of two
+        make_pipeline_plan(32, (17, 1, 14), (spec, spec),
+                           tile_overrides=(32, 128, 24))
+    with pytest.raises(ValueError):  # bb not a multiple of 8
+        make_pipeline_plan(32, (17, 1, 14), (spec, spec),
+                           tile_overrides=(12, 128, 32))
+    with pytest.raises(ValueError):  # per-layer bb must agree
+        make_pipeline_plan(32, (17, 1, 14), (spec, spec),
+                           tile_overrides=((8, 128, 32), (16, 128, 128)))
+
+
+def test_clearing_unregistered_overrides_does_not_invalidate(task):
+    """A heuristic-won tune (or artifact with overrides=null) must not cost
+    consumers already serving the geometry a plan rebuild or retrace."""
+    _, _, dep = _kan1_dep(task)
+    x = jax.random.uniform(jax.random.PRNGKey(4), (8, 17),
+                           minval=-1.0, maxval=1.0)
+    kan_network_deploy_apply(dep, x, interpret=True, backend="pallas")
+    stats0 = runtime.cache_stats()
+    runtime.PLAN_CACHE.set_tile_overrides(
+        tuple(dep.dims), tuple(dep.specs), dep.residual_raw, None
+    )
+    kan_network_deploy_apply(dep, x, interpret=True, backend="pallas")
+    stats1 = runtime.cache_stats()
+    assert stats1["traces"] == stats0["traces"]
+    assert stats1["hits"] == stats0["hits"] + 1
+
+
+def test_tuned_plan_is_picked_up_without_retracing_consumers(task):
+    _, _, dep = _kan1_dep(task)
+    # force a non-heuristic winner deterministically: prefer the smallest
+    # batch block (the heuristic picks the largest)
+    res = tune.tune_tiles(dep, batch=32, max_candidates=8, seed=0,
+                          register=True, warm=True,
+                          score_fn=lambda p: p.layers[0].bb)
+    assert res.tuned and res.registered
+    assert res.chosen_overrides[0][0] < res.heuristic_plan.layers[0].bb
+    # the registry serves the tuned plan to every plan resolution
+    tuned_plan = runtime.PLAN_CACHE.plan(
+        res.bucket, res.dims, res.specs, residual_raw=res.residual_raw
+    )
+    assert tuned_plan == res.chosen_plan
+    assert dep.replan(res.bucket).plan == res.chosen_plan
+    # consumers hit the warm cache entry: zero NEW traces, bit-exact output
+    traces0 = runtime.cache_stats()["traces"]
+    x = jax.random.uniform(jax.random.PRNGKey(3), (32, res.dims[0]),
+                           minval=-1.0, maxval=1.0)
+    y_tuned = kan_network_deploy_apply(dep, x, interpret=True,
+                                       backend="pallas")
+    assert runtime.cache_stats()["traces"] == traces0
+    runtime.PLAN_CACHE.set_tile_overrides(res.dims, res.specs,
+                                          res.residual_raw, None)
+    y_heur = kan_network_deploy_apply(dep, x, interpret=True,
+                                      backend="pallas")
+    np.testing.assert_array_equal(np.asarray(y_tuned), np.asarray(y_heur))
+
+
+# ----------------------------------------------------------------------------
+# Artifacts
+# ----------------------------------------------------------------------------
+
+
+def test_artifact_roundtrip_reproduces_the_deployment(task, tmp_path):
+    res = tune.pareto_search(
+        task, SPACE,
+        config=tune.SearchConfig(budget=3, n_init=2, seed=3, acim_seeds=1),
+    )
+    chosen = tune.select_point(res.front)
+    _, _, dep = tune.deploy_candidate(task, chosen.candidate)
+    tile = tune.tune_tiles(dep, batch=16, max_candidates=6, seed=0,
+                           register=True, warm=False,
+                           score_fn=lambda p: p.layers[0].bb)
+    assert tile.tuned
+    art = tune.build_tuning_artifact(search=res, chosen=chosen, tile=tile,
+                                     task=task.name)
+    path = tmp_path / "artifact.json"
+    tune.save_tuning_artifact(str(path), art)
+
+    runtime.reset_cache()  # cold runtime: only the file remains
+    loaded = tune.load_tuning_artifact(str(path))
+    assert loaded["version"] == tune.ARTIFACT_VERSION
+    assert loaded["space_hash"] == tune.space_hash(SPACE)
+    assert loaded["seed"] == 3
+    resolved = tune.apply_tuning_artifact(loaded)
+    # the chosen point and the tuned plan both survive the round trip
+    assert resolved["candidate"] == chosen.candidate
+    assert resolved["spec"] == chosen.candidate.spec()
+    assert resolved["plan"] == tile.chosen_plan
+    # and a fresh deployment under the reloaded artifact is bit-identical
+    _, _, dep2 = tune.deploy_candidate(task, resolved["candidate"])
+    x = jax.random.uniform(jax.random.PRNGKey(5), (10, task.dims[0]),
+                           minval=-1.0, maxval=1.0)
+    y1 = kan_network_deploy_apply(dep, x, interpret=True)
+    y2 = kan_network_deploy_apply(dep2, x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_artifact_schema_validation(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"kind": "something-else"}))
+    with pytest.raises(ValueError):
+        tune.load_tuning_artifact(str(bad))
+    newer = tmp_path / "newer.json"
+    newer.write_text(json.dumps({"kind": tune.ARTIFACT_KIND,
+                                 "version": tune.ARTIFACT_VERSION + 1}))
+    with pytest.raises(ValueError):
+        tune.load_tuning_artifact(str(newer))
+    with pytest.raises(ValueError):
+        tune.save_tuning_artifact(str(tmp_path / "x.json"),
+                                  {"kind": "nope"})
+
+
+def test_candidate_and_space_serialization():
+    cand = tune.Candidate(grid_size=8, voltage_bits=5, use_sam=True)
+    assert tune.candidate_from_dict(cand.to_dict()) == cand
+    # hash is stable across equal spaces, sensitive to axis changes
+    assert tune.space_hash(SPACE) == tune.space_hash(
+        tune.DesignSpace(grid_size=(3, 5, 8), voltage_bits=(3, 4, 5),
+                         array_rows=(128,)))
+    assert tune.space_hash(SPACE) != tune.space_hash(tune.DesignSpace())
+    # invalid candidates are structurally rejected by the space
+    assert not SPACE.is_valid(tune.Candidate(grid_size=200, n_bits=6))
+    assert not SPACE.is_valid(tune.Candidate(voltage_bits=9))
