@@ -19,7 +19,12 @@ transformer-FFN width (the qwen2.5-14b smoke KAN-FFN geometry).  Each row
 also reports executor throughput (rows through the KAN per second) and the
 run ends with the runtime plan-cache hit/miss/trace counters plus a small
 end-to-end served-tokens/s measurement of the continuous-batching engine on
-the fused datapath.  ``--tuned`` adds a heuristic-plan vs tuned-plan leg:
+the fused datapath.  A SHARDED section then times the mesh-sharded runtime
+(data-only and data x model meshes over every host device, plus a
+mesh-sharded engine leg), recording mesh shape and device count so the perf
+trajectory captures scaling — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to exercise it on a
+CPU container.  ``--tuned`` adds a heuristic-plan vs tuned-plan leg:
 ``repro.tune.tiles`` sweeps tile geometries for each config (measured on
 TPU, deterministic cost proxy in interpret mode), registers the winner with
 the plan cache, and the fused executor is re-timed on it.  Off-TPU the
@@ -77,16 +82,20 @@ def _time_fn(fn, x, repeats: int) -> tuple:
     return sum(times) / len(times) * 1e6, min(times) * 1e6
 
 
-def _bench_serve(requests: int, max_new: int, print_fn=print) -> dict:
+def _bench_serve(requests: int, max_new: int, print_fn=print,
+                 mesh=None) -> dict:
     """End-to-end served-tokens/s of the fused datapath (continuous batching
-    over the qwen2.5-14b smoke KAN-FFN config, mixed prompt lengths)."""
+    over the qwen2.5-14b smoke KAN-FFN config, mixed prompt lengths).  With
+    ``mesh`` the engine serves mesh-sharded (slots/KV on "data", KAN-FFN
+    channels on "model")."""
     from repro.configs.registry import smoke_config
     from repro.models.model import init_params
     from repro.serve.engine import Request, ServeEngine
 
     cfg = smoke_config("qwen2.5-14b").kan_variant()
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, slots=2, max_len=64, kan_deploy=True)
+    engine = ServeEngine(params, cfg, slots=2, max_len=64, kan_deploy=True,
+                         mesh=mesh)
     rng = jax.random.PRNGKey(1)
     reqs = []
     for rid in range(requests):
@@ -106,13 +115,69 @@ def _bench_serve(requests: int, max_new: int, print_fn=print) -> dict:
         "tokens_per_s": total / wall,
         "prefill_traces": stats["prefill_traces"],
         "decode_traces": stats["decode_traces"],
+        "mesh": stats["mesh"],
     }
     print_fn(
         f"serve,arch={row['arch']},tokens={total},"
         f"tokens_per_s={row['tokens_per_s']:.1f},"
-        f"prefill_traces={row['prefill_traces']}"
+        f"prefill_traces={row['prefill_traces']},"
+        f"mesh={None if mesh is None else 'x'.join(map(str, row['mesh']['shape']))}"
     )
     return row
+
+
+def _bench_sharded(batch: int, repeats: int, serve_requests: int,
+                   serve_max_new: int, print_fn=print) -> dict:
+    """Mesh-sharded legs: the perf trajectory's scaling axis.
+
+    Times the fused executor on a data-only mesh over every host device and
+    (when >= 2 devices) a data x model mesh, on the FFN-width config whose
+    output channels actually shard, plus a sharded-engine served-tokens/s
+    leg.  Mesh shape and device count ride in every row so BENCH json
+    captures scaling, not just single-device latency.  On 1 device this
+    degenerates to a 1x1 mesh — the overhead-of-shard_map datapoint.
+    """
+    from repro.launch.mesh import make_local_mesh
+
+    n = len(jax.devices())
+    interpret = default_interpret()
+    name, dims, grid = CONFIGS[2]  # ffn width: op=128 per layer, shardable
+    kspec = KANSpec(dims=dims, grid_size=grid)
+    key = jax.random.PRNGKey(0)
+    qparams = quantize_kan_network(init_kan_network(key, kspec), kspec)
+    dep = deploy_kan_network(qparams, kspec, batch=batch)
+    x = jax.random.uniform(key, (batch, dims[0]), minval=-1.0, maxval=1.0)
+
+    legs = [("data", make_local_mesh(n, 1))]
+    if n >= 2:
+        legs.append(("data_x_model", make_local_mesh(n // 2, 2)))
+    rows = []
+    for leg, mesh in legs:
+        fn = lambda x, m=mesh: kan_network_deploy_apply(
+            dep, x, interpret=interpret, backend="pallas", mesh=m
+        )
+        mean_us, min_us = _time_fn(fn, x, repeats)
+        row = {
+            "name": name,
+            "leg": leg,
+            "mesh_axes": list(mesh.axis_names),
+            "mesh_shape": [int(s) for s in mesh.devices.shape],
+            "device_count": n,
+            "batch": batch,
+            "fused_sharded_us": mean_us,
+            "fused_sharded_min_us": min_us,
+            "fused_sharded_tokens_per_s": batch / (min_us * 1e-6),
+        }
+        rows.append(row)
+        print_fn(
+            f"sharded,{name},leg={leg},"
+            f"mesh={'x'.join(map(str, row['mesh_shape']))},"
+            f"devices={n},fused_sharded_us={mean_us:.0f},"
+            f"tok_s={row['fused_sharded_tokens_per_s']:.0f}"
+        )
+    serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn,
+                         mesh=legs[-1][1])
+    return {"device_count": n, "rows": rows, "serve": serve}
 
 
 def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
@@ -196,14 +261,18 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
                     f"tile_tuned={int(row['tile_tuned'])}")
         print_fn(msg)
     serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn)
-    cache = runtime.cache_stats()  # after the serve leg: it shares the cache
+    sharded = _bench_sharded(batch, repeats, serve_requests, serve_max_new,
+                             print_fn=print_fn)
+    cache = runtime.cache_stats()  # after the serve legs: they share the cache
     print_fn(f"plan_cache,{cache}")
     return {
         "benchmark": "kan_pipeline",
         "backend": jax.default_backend(),
         "pallas_interpret": interpret,
+        "device_count": len(jax.devices()),
         "rows": rows,
         "serve": serve,
+        "sharded": sharded,
         "plan_cache": cache,
     }
 

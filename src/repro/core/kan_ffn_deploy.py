@@ -56,6 +56,7 @@ def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
 def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
                             interpret: bool | None = None,
                             backend: str | None = None,
+                            mesh=None,
                             key=None) -> jax.Array:
     """Quantized KAN-FFN forward via the runtime-resolved executor.
 
@@ -64,7 +65,9 @@ def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
     residual branch contracting the RAW pre-squash input (matching the float
     path models/layers._kan_linear).  ``interpret=None`` auto-selects
     interpret mode off-TPU; ``backend=None`` resolves through
-    ``repro.runtime`` (scope > ``REPRO_KAN_BACKEND`` > "pallas").
+    ``repro.runtime`` (scope > ``REPRO_KAN_BACKEND`` > "pallas") and
+    ``mesh=None`` likewise (``use_mesh`` scope — how the serving engine
+    shards every FFN token batch on "data" and hidden channels on "model").
     """
     from ..models.layers import kan_ffn_spec
 
@@ -76,7 +79,7 @@ def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
     )
     x2 = x.reshape(b * s, d).astype(jnp.float32)
     y = kan_network_deploy_apply(
-        dep, x2, interpret=interpret, backend=backend, key=key
+        dep, x2, interpret=interpret, backend=backend, mesh=mesh, key=key
     )
     return y.reshape(b, s, d).astype(x.dtype)
 

@@ -32,6 +32,7 @@ __all__ = [
     "quantize_kan_network",
     "deploy_kan_network",
     "deploy_kan_ffn_stack",
+    "place_deployed_kan",
     "kan_network_deploy_apply",
     "kan_network_apply_ref",
     "default_interpret",
@@ -45,6 +46,11 @@ class DeployedKAN:
     layers: tuple of {"lut", "wc", "wb"} with weights already padded to the
     plan (dequantized f32 — the values the int8 storage decodes to).
     specs/dims describe the logical network for the runtime backends.
+    placement: the mesh this bundle's weights were placed on with
+    :func:`place_deployed_kan` (or None).  The runtime resolves it as the
+    lowest-precedence mesh source (explicit ``mesh=`` arg > ``use_mesh``
+    scope > this), and ``replan``/``dataclasses.replace`` carry it along, so
+    a placed bundle keeps executing sharded across batch re-binds.
     """
 
     plan: PipelinePlan
@@ -52,17 +58,41 @@ class DeployedKAN:
     specs: tuple
     dims: tuple
     residual_raw: bool = False
+    placement: object = None
 
     def replan(self, batch: int) -> "DeployedKAN":
         """Rebind to a new batch size — a plan-cache lookup, not a rebuild
         (weights/padding are batch-agnostic; the runtime buckets batches on
-        its own, so this only matters for geometry introspection)."""
+        its own, so this only matters for geometry introspection).  The
+        placement, if any, survives the re-bind."""
         if batch == self.plan.b:
             return self
         plan = runtime.PLAN_CACHE.plan(
             batch, self.dims, self.specs, residual_raw=self.residual_raw
         )
         return dataclasses.replace(self, plan=plan)
+
+
+def place_deployed_kan(dep: DeployedKAN, mesh) -> DeployedKAN:
+    """Shard a deployed bundle's weights onto a mesh and record the placement.
+
+    Weights are device_put with ``dist.sharding.deployed_kan_pspecs``
+    (output channels on "model", SH-LUT replicated) — the exact layout the
+    runtime's shard_map consumes, so sharded execution starts from resident
+    shards with no re-layout.  The returned bundle carries ``placement=
+    mesh``, which the runtime picks up as its default mesh; pass
+    ``placement=None`` via ``dataclasses.replace`` to detach.
+    """
+    import jax as _jax
+
+    from ..dist.sharding import deployed_kan_pspecs, to_shardings
+
+    shardings = to_shardings(deployed_kan_pspecs(dep, mesh), mesh)
+    layers = tuple(
+        {k: _jax.device_put(a, s[k]) for k, a in lw.items()}
+        for lw, s in zip(dep.layers, shardings)
+    )
+    return dataclasses.replace(dep, layers=layers, placement=mesh)
 
 
 def quantize_kan_network(params_list, kspec: KANSpec):
@@ -120,6 +150,7 @@ def kan_network_deploy_apply(
     xraw: jax.Array | None = None,
     interpret: bool | None = None,
     backend: str | None = None,
+    mesh=None,
     key=None,
     cim=None,
     sam_perms=None,
@@ -128,12 +159,14 @@ def kan_network_deploy_apply(
     """Run float input x (B, F0) through the runtime-resolved backend.
 
     ``backend=None`` resolves via the runtime (scope > ``REPRO_KAN_BACKEND``
-    env var > "pallas").  ``key``/``cim``/``sam_perms`` only matter for the
-    acim backend (``sam_perms``: per-layer KAN-SAM row placements).
+    env var > "pallas"); ``mesh=None`` likewise (``use_mesh`` scope >
+    ``dep.placement`` > unsharded).  ``key``/``cim``/``sam_perms`` only
+    matter for the acim backend (``sam_perms``: per-layer KAN-SAM row
+    placements).
     """
     return runtime.execute(
         dep, x, backend=backend, default="pallas",
-        xraw=xraw, interpret=interpret, key=key, cim=cim,
+        xraw=xraw, interpret=interpret, mesh=mesh, key=key, cim=cim,
         sam_perms=sam_perms,
         return_intermediates=return_intermediates,
     )

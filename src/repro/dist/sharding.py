@@ -149,14 +149,19 @@ def deployed_kan_pspecs(dep, mesh):
     The padded banded weights shard their OUTPUT-channel dim on "model"
     (each shard owns whole columns of the MAC — no cross-shard reduction,
     matching the per-output-channel quantization scales), the shared SH-LUT
-    stays replicated.  Padded dims are multiples of 128, so the
-    divisibility guard passes for any power-of-two model axis <= 128.
+    stays replicated.  Shardability is the runtime's criterion
+    (``kernels.kan_spline.pipeline.model_shardable``: the axis divides the
+    128-padded dim and each shard keeps a multiple-of-8 slab), so placement
+    and sharded execution always agree — a layer the runtime would fall
+    back to replicated is never placed sharded.
     """
+    from ..kernels.kan_spline.pipeline import model_shardable
+
     msize = _axis_size(mesh, "model")
 
     def one_layer(lw):
         def col_spec(a):
-            if msize > 1 and a.shape[-1] % msize == 0:
+            if model_shardable(int(a.shape[-1]), msize):
                 return P(*([None] * (a.ndim - 1) + ["model"]))
             return P(*([None] * a.ndim))
 

@@ -50,9 +50,12 @@ __all__ = [
     "LayerPlan",
     "PipelinePlan",
     "make_pipeline_plan",
+    "model_shardable",
     "normalize_tile_overrides",
+    "shard_local_plan",
     "validate_plan",
     "pad_layer_weights",
+    "run_pipeline_layer",
     "kan_pipeline",
     "kan_pipeline_impl",
 ]
@@ -211,6 +214,71 @@ def make_pipeline_plan(
             )
         )
     return PipelinePlan(b=batch, bp=bp, layers=tuple(layers))
+
+
+def model_shardable(op: int, model_size: int) -> bool:
+    """Can an output dim split over a model axis of this size?
+
+    The axis must divide the padded dim AND each shard must keep a
+    multiple-of-8 slab (the smallest valid output tile).  This is THE
+    shardability criterion — ``shard_local_plan`` (execution) and
+    ``dist.sharding.deployed_kan_pspecs`` (weight placement) both use it,
+    so a bundle is never placed sharded where the runtime would execute it
+    replicated (or vice versa).
+    """
+    return (model_size > 1 and op % model_size == 0
+            and (op // model_size) % 8 == 0)
+
+
+def shard_local_plan(plan: PipelinePlan, model_size: int) -> tuple:
+    """Per-shard geometry for output-channel ("model") sharding of a stack.
+
+    Each model shard owns WHOLE output columns of every sharded layer (no
+    cross-shard reduction in the MAC — the contraction axis stays full), so
+    the per-shard plan keeps ``f``/``fp``/``bf`` and divides ``op`` by the
+    model-axis size.  A layer is shardable when the axis divides its padded
+    output dim AND the per-shard slab still admits a valid output tile
+    (``op/model_size`` a multiple of 8); otherwise the layer FALLS BACK to
+    replicated columns and the reason is recorded.  ``bo`` is halved until it
+    divides the per-shard slab, so tuned tile plans (repro.tune.tiles) stay
+    valid per-shard wherever they still divide.
+
+    Returns ``(local_plan, sharded_flags, notes)``: the per-shard plan (its
+    per-layer ``o``/``op`` are the LOCAL padded widths for sharded layers —
+    logical-column slicing happens globally, after the gather), one bool per
+    layer, and human-readable fallback reasons.
+
+    The local plan intentionally violates two :func:`validate_plan`
+    invariants — the inter-layer boundary (``fp`` stays full while the
+    previous ``op`` is local: an all-gather over "model" restores the full
+    width between layers) and the 128-padded-boundary rule (the 128 pad is a
+    GLOBAL property; each shard holds a power-of-two fraction of it) — so it
+    must not be re-validated.
+    """
+    n = len(plan.layers)
+    if model_size <= 1:
+        return plan, (False,) * n, ()
+    layers, flags, notes = [], [], []
+    for li, lp in enumerate(plan.layers):
+        if not model_shardable(lp.op, model_size):
+            notes.append(
+                f"layer {li}: op={lp.op} not shardable over model={model_size}"
+                " (needs a multiple-of-8 per-shard slab); columns replicated"
+            )
+            layers.append(lp)
+            flags.append(False)
+            continue
+        op_l = lp.op // model_size
+        bo_l = lp.bo
+        while op_l % bo_l:
+            bo_l //= 2
+        layers.append(dataclasses.replace(lp, o=op_l, op=op_l, bo=bo_l))
+        flags.append(True)
+    return (
+        dataclasses.replace(plan, layers=tuple(layers)),
+        tuple(flags),
+        tuple(notes),
+    )
 
 
 def validate_plan(plan: PipelinePlan) -> None:
@@ -440,6 +508,12 @@ def _run_layer(
     if lp.emit_codes:
         return outs[0], outs[1]
     return outs[0], None
+
+
+# Public name for the single-layer step: the mesh-sharded runtime composes
+# layers itself (it needs an all-gather between them), so it drives the same
+# fused kernel one layer at a time instead of through kan_pipeline_impl.
+run_pipeline_layer = _run_layer
 
 
 # ----------------------------------------------------------------------------

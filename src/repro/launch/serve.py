@@ -9,6 +9,10 @@
     # tile plan applied at startup):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --kan-ffn --tuned-config TUNE_artifact.json
+    # mesh-sharded serving (slots/KV on "data", KAN-FFN channels on "model"):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch qwen2.5-14b --kan-ffn \
+        --mesh data=4,model=2
 """
 
 from __future__ import annotations
@@ -42,6 +46,13 @@ def main():
              "quantization point to the KAN-FFN config and registers its "
              "tuned tile plan with the runtime plan cache",
     )
+    ap.add_argument(
+        "--mesh", default=None, metavar="SPEC",
+        help="serve mesh-sharded: 'data=2,model=4' (one axis may omit =N to "
+             "absorb the remaining devices, e.g. 'data,model=2').  Slots / "
+             "KV cache shard on data, KAN-FFN output channels on model; "
+             "takes precedence over any ambient runtime.use_mesh scope",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
@@ -72,8 +83,21 @@ def main():
     # startup and every prefill/decode step resolves its executor through
     # repro.runtime (interpret mode auto-selected off-TPU); --backend acim
     # additionally injects the measured RRAM-ACIM non-idealities.
+    mesh = None
+    if args.mesh:
+        from .mesh import parse_mesh_spec
+
+        mesh = parse_mesh_spec(args.mesh)
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
-                         kan_deploy=args.kan_ffn, kan_backend=args.backend)
+                         kan_deploy=args.kan_ffn, kan_backend=args.backend,
+                         mesh=mesh)
+    if mesh is not None:
+        layout = engine.mesh_layout()
+        print("mesh: " + " x ".join(
+            f"{a}={s}" for a, s in zip(layout["axes"], layout["shape"])
+        ) + f" ({layout['devices']} of {len(jax.devices())} devices; "
+            f"slots {'sharded' if layout['slots_sharded'] else 'replicated'}"
+            " on data)")
     if args.kan_ffn:
         print(f"kan-ffn: G={cfg.kan_grid} K={cfg.kan_order} "
               f"n_bits={cfg.kan_n_bits}, plan source: "
@@ -97,6 +121,12 @@ def main():
     print(f"compiles: prefill={stats['prefill_traces']} "
           f"decode={stats['decode_traces']}; "
           f"kan plan cache: {stats['plan_cache']}")
+    if mesh is not None:
+        from .. import runtime
+
+        for fp, reasons in runtime.shard_notes().items():
+            for r in reasons:
+                print(f"shard fallback: {r}")
 
 
 if __name__ == "__main__":

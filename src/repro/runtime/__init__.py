@@ -25,6 +25,13 @@ from .executor import (
     resolve_backend,
     use_backend,
 )
+from .meshexec import (
+    mesh_axis_sizes,
+    reset_shard_notes,
+    resolve_mesh,
+    shard_notes,
+    use_mesh,
+)
 from .plancache import PLAN_CACHE, PlanCache, PlanKey, bucket_batch
 
 __all__ = [
@@ -41,12 +48,16 @@ __all__ = [
     "default_interpret",
     "execute",
     "get_executor",
+    "mesh_axis_sizes",
     "quiet_cim_config",
     "ref_composition",
     "register_executor",
     "reset_cache",
     "resolve_backend",
+    "resolve_mesh",
+    "shard_notes",
     "use_backend",
+    "use_mesh",
 ]
 
 
@@ -63,3 +74,4 @@ def cache_stats() -> dict:
 def reset_cache() -> None:
     """Drop all cached plans/compiled applies and zero the counters."""
     PLAN_CACHE.clear()
+    reset_shard_notes()

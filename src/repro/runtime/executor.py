@@ -25,6 +25,15 @@ backends run the same deployed bundle (duck-typed: ``.dims``, ``.specs``,
 Backend selection precedence: explicit argument > :func:`use_backend` scope
 > ``REPRO_KAN_BACKEND`` env var > the call site's default.  All backends
 share the :mod:`plancache` (batch bucketing + LRU of compiled applies).
+
+Every backend also has a MESH dimension (:mod:`repro.runtime.meshexec`):
+when a mesh is bound (explicit ``mesh=`` argument > :func:`use_mesh` scope >
+the bundle's ``DeployedKAN.placement``), the cached apply is built as a
+``shard_map`` — batch over ``"data"``, each layer's output channels over
+``"model"`` per ``dist.sharding.deployed_kan_pspecs``, the boundary
+requantizer shard-local and the int boundary codes all-gathered between
+layers.  The plan-cache key carries the mesh fingerprint, so sharded and
+unsharded entries never collide.
 """
 
 from __future__ import annotations
@@ -42,7 +51,20 @@ import numpy as np
 from ..core.asp_quant import dense_basis_from_codes, quantize_input
 from ..core.cim import CIMConfig
 from ..core.tmdv import TMDVConfig, apply_input_noise
-from ..kernels.kan_spline.pipeline import kan_pipeline_impl
+from ..kernels.kan_spline.pipeline import (
+    kan_pipeline_impl,
+    run_pipeline_layer,
+    shard_local_plan,
+)
+from .meshexec import (
+    build_sharded_runner,
+    mesh_axis_sizes,
+    mesh_fingerprint,
+    mesh_from_fingerprint,
+    register_mesh,
+    resolve_mesh,
+    use_mesh,
+)
 from .plancache import PLAN_CACHE, PlanKey, bucket_batch
 
 __all__ = [
@@ -53,6 +75,8 @@ __all__ = [
     "resolve_backend",
     "get_executor",
     "use_backend",
+    "use_mesh",
+    "resolve_mesh",
     "quiet_cim_config",
     "RefExecutor",
     "PallasExecutor",
@@ -166,12 +190,40 @@ def _slice_result(out, b, return_intermediates):
     return out[:b]
 
 
+# Deriving a mesh fingerprint walks every device of the mesh and the plan's
+# layer geometry; on the serving hot path that would run per token per
+# FFN block just to hit an already-cached entry, so the derivation is
+# memoized on (mesh, geometry, bucket).  The registration side effects stay
+# per-call (cheap dict writes) so reset_cache()/reset_shard_notes() are
+# repopulated by the very next execution.
+_MESH_FP_MEMO: dict = {}
+
+
+def _mesh_key_fingerprint(mesh, dsize, msize, dims, specs, bucket,
+                          residual_raw) -> tuple:
+    memo_key = (mesh, dims, specs, bucket, residual_raw)
+    hit = _MESH_FP_MEMO.get(memo_key)
+    if hit is None:
+        base = PLAN_CACHE.plan(bucket // dsize, dims, specs,
+                               residual_raw=residual_raw)
+        _, sharded, notes = shard_local_plan(base, msize)
+        hit = (mesh_fingerprint(mesh, sharded), notes)
+        if len(_MESH_FP_MEMO) > 256:
+            _MESH_FP_MEMO.clear()
+        _MESH_FP_MEMO[memo_key] = hit
+    fp, notes = hit
+    register_mesh(fp, mesh, notes)
+    return fp
+
+
 class _CachedExecutor:
     """Common plancache plumbing: bucket, pad, look up, run, slice.
 
-    Subclasses customize via three hooks: ``_flags(**opts)`` (backend
-    statics that belong in the cache key), ``_build(plan_key)`` (the
-    per-entry jitted apply), and ``_run(...)`` (how the apply is invoked).
+    Subclasses customize via hooks: ``_flags(**opts)`` (backend statics that
+    belong in the cache key), ``_build(plan_key)`` (the per-entry jitted
+    apply), ``_run(...)`` (how the apply is invoked), and — for the mesh
+    path — ``_mesh_layer_fn`` / ``_mesh_noise_fn`` (the per-shard layer step
+    and the per-shard stochastic terms inside the shard_map body).
     """
 
     name = "?"
@@ -179,16 +231,27 @@ class _CachedExecutor:
     def _flags(self, **opts) -> tuple:
         return ()
 
-    def _build(self, key: PlanKey):
-        raise NotImplementedError
-
     def __call__(self, dep, x, *, xraw=None, interpret=None, key=None,
-                 return_intermediates=False, **opts):
+                 mesh=None, return_intermediates=False, **opts):
         if interpret is None:
             interpret = default_interpret()
+        mesh = resolve_mesh(mesh, getattr(dep, "placement", None))
         codes, xraw = _entry_codes(dep, x, xraw)
         b = codes.shape[0]
-        bucket = bucket_batch(b)
+        if mesh is None:
+            bucket = bucket_batch(b)
+            mesh_fp = ()
+        else:
+            dsize, msize = mesh_axis_sizes(mesh)
+            # mesh-aware bucketing: the global bucket must split into
+            # per-shard slabs of at least one batch tile (>= 8 rows), so the
+            # bucket ladder starts at 8 * data_size (divisible by data_size
+            # for ANY axis size — data sharding never needs a fallback)
+            bucket = bucket_batch(b, lo=8 * dsize)
+            mesh_fp = _mesh_key_fingerprint(
+                mesh, dsize, msize, tuple(dep.dims), tuple(dep.specs),
+                bucket, dep.residual_raw,
+            )
         plan_key = PlanKey(
             dims=tuple(dep.dims),
             specs=tuple(dep.specs),
@@ -197,6 +260,7 @@ class _CachedExecutor:
             interpret=interpret,
             backend=self.name,
             flags=self._flags(**opts),
+            mesh=mesh_fp,
         )
         _, apply = PLAN_CACHE.get(plan_key, self._build)
         out = self._run(apply, _pad_batch(codes, bucket),
@@ -207,6 +271,74 @@ class _CachedExecutor:
     def _run(self, apply, codes, xraw, layers, key, return_intermediates):
         return apply(codes, xraw, layers,
                      return_intermediates=return_intermediates)
+
+    def _build(self, key: PlanKey):
+        if key.mesh:
+            return self._build_sharded(key)
+        return self._build_local(key)
+
+    def _build_local(self, key: PlanKey):
+        raise NotImplementedError
+
+    # -- the mesh path ---------------------------------------------------
+
+    def _mesh_layer_fn(self, key: PlanKey, local_plan):
+        """Per-shard layer step: the fused Pallas kernel on local geometry
+        (shared by "pallas" and "acim"; "ref" overrides with its jnp step)."""
+        def layer_fn(li, lp, lw, h_codes, h_raw, psum_noise):
+            return run_pipeline_layer(
+                h_codes, h_raw if lp.residual_raw else None,
+                lw["lut"], lw["wc"], lw["wb"], lp, local_plan.bp,
+                interpret=key.interpret, psum_noise=psum_noise,
+            )
+        return layer_fn
+
+    def _mesh_noise_fn(self, key: PlanKey, base_plan, local_plan, sharded):
+        return None  # deterministic backends need no per-shard terms
+
+    def _build_sharded(self, key: PlanKey):
+        """One shard_mapped apply per (geometry, bucket, mesh fingerprint).
+
+        The per-shard plan divides each sharded layer's padded output dim by
+        the model-axis size (whole-column ownership: the MAC never reduces
+        across shards) and rebuilds the batch tiling for the per-shard batch
+        slab; tuned tile overrides are picked up through the plan cache at
+        the per-shard geometry and kept wherever they still divide it.
+        """
+        mesh = mesh_from_fingerprint(key.mesh)
+        dsize, _ = mesh_axis_sizes(mesh)
+        base = PLAN_CACHE.plan(key.bucket // dsize, key.dims, key.specs,
+                               residual_raw=key.residual_raw)
+        local_plan, sharded, _ = shard_local_plan(base, mesh_axis_sizes(mesh)[1])
+        assert sharded == key.mesh[3], (sharded, key.mesh)
+        runner = build_sharded_runner(
+            mesh,
+            local_plan=local_plan,
+            layer_sharded=sharded,
+            residual_raw=key.residual_raw,
+            layer_fn=self._mesh_layer_fn(key, local_plan),
+            noise_fn=self._mesh_noise_fn(key, base, local_plan, sharded),
+        )
+        lp0 = base.layers[0]
+        logical_o = tuple(lp.o for lp in base.layers)
+
+        @functools.partial(jax.jit, static_argnames=("return_intermediates",))
+        def apply(codes, xraw, layers, *extra, return_intermediates=False):
+            PLAN_CACHE.record_trace()
+            codes = jnp.pad(codes, ((0, 0), (0, lp0.fp - lp0.f)))
+            if key.residual_raw:
+                xraw = jnp.pad(
+                    xraw.astype(jnp.float32), ((0, 0), (0, lp0.fp - lp0.f))
+                )
+            y, boundary = runner(codes, xraw, layers, *extra)
+            y = y[:, : logical_o[-1]]
+            if return_intermediates:
+                return y, tuple(
+                    c[:, : logical_o[li]] for li, c in enumerate(boundary)
+                )
+            return y
+
+        return base, apply
 
 
 # ----------------------------------------------------------------------------
@@ -253,10 +385,50 @@ def ref_composition(logical_layers, specs, codes, xraw, *,
     return y
 
 
+def _ref_padded_layer(lp, lw, codes, xraw, psum_noise=None):
+    """One layer of the ref composition on PADDED per-shard geometry.
+
+    The mesh path's jnp analogue of ``run_pipeline_layer``: same op order as
+    the kernel (dense SH-LUT basis -> banded MAC -> fused ReLU branch ->
+    kernel-style boundary re-code), operating on the padded weights a shard
+    actually holds (zero-padded lanes contribute nothing).
+    """
+    spec = lp.spec
+    b = codes.shape[0]
+    basis = dense_basis_from_codes(codes, lw["lut"], spec)
+    y = jax.lax.dot_general(
+        basis.reshape(b, lp.fp * spec.num_basis),
+        lw["wc"].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if lp.residual_raw:
+        resid = xraw.astype(jnp.float32)
+    else:
+        resid = spec.lo + codes.astype(jnp.float32) * spec.code_step
+    y = y + jnp.maximum(resid, 0.0) @ lw["wb"].astype(jnp.float32)
+    if psum_noise is not None:
+        y = y + psum_noise
+    if not lp.emit_codes:
+        return y, None
+    nxt = lp.next_spec
+    h = jnp.tanh(y) * (0.5 * (nxt.hi - nxt.lo)) + 0.5 * (nxt.hi + nxt.lo)
+    q = jnp.floor((h - nxt.lo) / nxt.code_step + 0.5).astype(jnp.int32)
+    return y, jnp.clip(q, 0, nxt.num_codes - 1)
+
+
 class RefExecutor(_CachedExecutor):
     name = "ref"
 
-    def _build(self, key: PlanKey):
+    def _mesh_layer_fn(self, key: PlanKey, local_plan):
+        def layer_fn(li, lp, lw, h_codes, h_raw, psum_noise):
+            return _ref_padded_layer(
+                lp, lw, h_codes, h_raw if lp.residual_raw else None,
+                psum_noise=psum_noise,
+            )
+        return layer_fn
+
+    def _build_local(self, key: PlanKey):
         plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
                                residual_raw=key.residual_raw)
 
@@ -282,7 +454,7 @@ class RefExecutor(_CachedExecutor):
 class PallasExecutor(_CachedExecutor):
     name = "pallas"
 
-    def _build(self, key: PlanKey):
+    def _build_local(self, key: PlanKey):
         plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
                                residual_raw=key.residual_raw)
 
@@ -410,26 +582,98 @@ class ACIMExecutor(_CachedExecutor):
         return apply(codes, xraw, layers, key,
                      return_intermediates=return_intermediates)
 
-    def _build(self, key: PlanKey):
+    def _statics(self, key: PlanKey) -> tuple:
+        """(cfg, sam_perms, has_input_noise, has_psum, x_max) from the key."""
         cfg = key.flags[1]
         sam_perms = None
         if len(key.flags) >= 4 and key.flags[2] == "sam":
             sam_perms = key.flags[3]
-        plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
-                               residual_raw=key.residual_raw)
-        spec0 = key.specs[0]
         tm = cfg.input_gen
         has_input_noise = (not cfg.deterministic) and (
             tm.sigma_v > 0.0 or tm.sigma_t > 0.0
         )
         has_psum = (not cfg.deterministic) and cfg.sigma_ps_ref > 0.0
-        x_max = float(2 ** spec0.lut_bits - 1)
-        row_gains = tuple(
+        x_max = float(2 ** key.specs[0].lut_bits - 1)
+        return cfg, sam_perms, has_input_noise, has_psum, x_max
+
+    def _row_gains(self, key: PlanKey, plan) -> tuple:
+        cfg, sam_perms, *_ = self._statics(key)
+        return tuple(
             _irdrop_row_gain(
                 lp, cfg, perm=sam_perms[li] if sam_perms is not None else None
             )
             for li, lp in enumerate(plan.layers)
         )
+
+    def _mesh_layer_fn(self, key: PlanKey, local_plan):
+        """The pallas step with the systematic IR-drop gains folded into the
+        shard-local conductance columns.  The gains are a full-length ROW
+        vector (the contraction axis stays whole on every shard), so they
+        broadcast unchanged against the shard's column slab."""
+        base_fn = super()._mesh_layer_fn(key, local_plan)
+        row_gains = self._row_gains(key, local_plan)
+
+        def layer_fn(li, lp, lw, h_codes, h_raw, psum_noise):
+            if row_gains[li] is not None:
+                lw = {**lw, "wc": lw["wc"] * jnp.asarray(row_gains[li])}
+            return base_fn(li, lp, lw, h_codes, h_raw, psum_noise)
+
+        return layer_fn
+
+    def _mesh_noise_fn(self, key: PlanKey, base_plan, local_plan, sharded):
+        """Per-shard stochastic terms inside the shard_map body.
+
+        The PRNG key splits per shard: the data index is folded in first
+        (every batch slab draws decorrelated noise), and the model index is
+        folded into a layer's partial-sum draw ONLY when that layer's
+        columns are sharded — replicated layers must see identical noise on
+        every model replica, and entry-code noise (codes are replicated
+        across "model") likewise folds the data index only.  Per-tile sigma
+        stays consistent under sharding by construction: each shard owns
+        whole MAC columns, so the per-shard ``n_arrays`` (the physical
+        macros one column's contraction spans) equals the unsharded value,
+        and the per-channel ``w_lsb`` computed from the local column slab
+        matches the same columns of the global weight matrix.
+        """
+        cfg, _, has_input_noise, has_psum, x_max = self._statics(key)
+        if not (has_input_noise or has_psum):
+            return None
+        spec0 = key.specs[0]
+        tm = cfg.input_gen
+
+        def noise_fn(codes, layers, noise_key, ctx):
+            k = jax.random.fold_in(noise_key, ctx.data_index)
+            if has_input_noise:
+                k, k_in = jax.random.split(k)
+                eff = apply_input_noise(codes, tm, k_in)
+                codes = jnp.clip(
+                    jnp.floor(eff + 0.5).astype(jnp.int32),
+                    0, spec0.num_codes - 1,
+                )
+            if not has_psum:
+                return codes, None
+            noises = []
+            for li, (lp, lw) in enumerate(zip(local_plan.layers, layers)):
+                w_lsb = jnp.max(jnp.abs(lw["wc"]), axis=0) / 127.0
+                lut_lsb = jnp.max(lw["lut"]) / x_max
+                std = (cfg.sigma_ps() * np.sqrt(_n_arrays(lp, cfg))
+                       * x_max * lut_lsb) * w_lsb
+                k, k_ps = jax.random.split(k)
+                if ctx.layer_sharded[li]:
+                    k_ps = jax.random.fold_in(k_ps, ctx.model_index)
+                noises.append(std[None, :] * jax.random.normal(
+                    k_ps, (local_plan.bp, lp.op), jnp.float32))
+            return codes, tuple(noises)
+
+        return noise_fn
+
+    def _build_local(self, key: PlanKey):
+        cfg, sam_perms, has_input_noise, has_psum, x_max = self._statics(key)
+        plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
+                               residual_raw=key.residual_raw)
+        spec0 = key.specs[0]
+        tm = cfg.input_gen
+        row_gains = self._row_gains(key, plan)
 
         @functools.partial(jax.jit, static_argnames=("return_intermediates",))
         def apply(codes, xraw, layers, noise_key, return_intermediates=False):

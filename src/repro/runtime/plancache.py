@@ -57,11 +57,20 @@ class PlanKey:
 
     dims: tuple
     specs: tuple            # per-layer ASPQuantSpec (frozen dataclasses)
-    bucket: int             # padded batch (power of two)
+    # padded batch: lo * 2^k (lo=8 unsharded -> powers of two; under a mesh
+    # lo=8*data_size, so the bucket divides by ANY data-axis size but is not
+    # necessarily a power of two).  GLOBAL (pre-shard) under a mesh.
+    bucket: int
     residual_raw: bool
     interpret: bool
     backend: str
     flags: tuple = ()       # backend statics (e.g. ("cim", CIMConfig(...)))
+    # mesh fingerprint: () for single-device execution, else (axis names,
+    # axis sizes, flat device ids, per-layer model-sharded bools) — see
+    # runtime.meshexec.mesh_fingerprint.  Sharded and unsharded entries can
+    # therefore never collide, and two meshes only share an entry when they
+    # lay the same devices out the same way.
+    mesh: tuple = ()
 
 
 class PlanCache:

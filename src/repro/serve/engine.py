@@ -22,6 +22,13 @@ When ``kan_deploy=True`` every KAN-FFN block executes through the
 "pallas"), sharing the runtime's plan/compile cache across prefill and
 decode.
 
+With ``mesh=`` the engine serves distributed: params are placed by the
+role-based sharding rules, the slot pool / KV cache shard their slot dim
+on "data" (decode advances all slots data-parallel), and every prefill /
+decode step runs under ``runtime.use_mesh``, so the KAN-FFN blocks execute
+on the mesh-sharded fused pipeline (batch on "data", output channels on
+"model").  A single-device mesh serves the same tokens as no mesh at all.
+
 On CPU/smoke configs this is a functional demo; the same engine drives the
 decode_32k serve_step that the dry-run lowers at production shapes.
 """
@@ -71,7 +78,7 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  kan_deploy: bool = False, kan_backend: str | None = None,
-                 prefill_buckets: bool | None = None):
+                 prefill_buckets: bool | None = None, mesh=None):
         if kan_deploy:
             # Execute every KAN-FFN block on the paper's quantized datapath:
             # int8 c' + SH-LUT through the repro.runtime executor registry
@@ -86,6 +93,19 @@ class ServeEngine:
             from ..core.kan_ffn_deploy import quantize_kan_ffn_params_tree
 
             params = quantize_kan_ffn_params_tree(params, cfg)
+        self.mesh = mesh
+        if mesh is not None:
+            # Distributed serving: params follow the role-based rules
+            # (attention/FFN weights on "model" where the axis divides, the
+            # quantized KAN bundles ride replicated — the runtime's
+            # shard_map distributes their padded pipeline form at execution)
+            # and the slot pool / KV cache shard their slot dim on "data",
+            # so every decode step advances the pool data-parallel.
+            from ..dist.sharding import cache_pspecs, param_pspecs, to_shardings
+
+            params = jax.device_put(
+                params, to_shardings(param_pspecs(params, mesh), mesh)
+            )
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -96,6 +116,21 @@ class ServeEngine:
             prefill_buckets = prefill_bucketing_supported(cfg)
         self.prefill_buckets = prefill_buckets and prefill_bucketing_supported(cfg)
         self.cache = M.init_cache(params, cfg, slots, max_len)
+        self._slots_sharded = False
+        if mesh is not None:
+            from jax.sharding import PartitionSpec
+
+            cspecs = cache_pspecs(self.cache, mesh, slots)
+            # report what cache_pspecs actually decided (the CLI banner
+            # echoes this) instead of re-deriving its divisibility rule
+            self._slots_sharded = any(
+                "data" in tuple(s) for s in jax.tree.leaves(
+                    cspecs, is_leaf=lambda x: isinstance(x, PartitionSpec)
+                )
+            )
+            self.cache = jax.device_put(
+                self.cache, to_shardings(cspecs, mesh)
+            )
         self.pos = np.zeros(slots, np.int32)
         self.active: list[Request | None] = [None] * slots
         self._t0 = {}
@@ -143,7 +178,7 @@ class ServeEngine:
         plen = len(req.prompt)
         # prefill the request alone (B=1), splice its cache into the pool
         tokens = jnp.asarray([self._padded_prompt(req.prompt)], jnp.int32)
-        with runtime.use_backend(self.kan_backend):
+        with runtime.use_backend(self.kan_backend), runtime.use_mesh(self.mesh):
             logits, cache1 = self._prefill_one(
                 self.params, tokens, jnp.asarray([plen - 1], jnp.int32)
             )
@@ -181,7 +216,8 @@ class ServeEngine:
             for i, r in enumerate(self.active):
                 if r is not None:
                     tokens[i] = r.output[-1]
-            with runtime.use_backend(self.kan_backend):
+            with runtime.use_backend(self.kan_backend), \
+                    runtime.use_mesh(self.mesh):
                 logits, self.cache = self._decode(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(self.pos),
@@ -209,6 +245,19 @@ class ServeEngine:
             "prefill_traces": self.prefill_traces,
             "decode_traces": self.decode_traces,
             "plan_cache": runtime.cache_stats(),
+            "mesh": self.mesh_layout(),
+        }
+
+    def mesh_layout(self) -> dict | None:
+        """The serving mesh layout (axes x sizes + device count + whether
+        the slot pool actually sharded on "data"), or None."""
+        if self.mesh is None:
+            return None
+        return {
+            "axes": list(self.mesh.axis_names),
+            "shape": [int(s) for s in self.mesh.devices.shape],
+            "devices": int(self.mesh.devices.size),
+            "slots_sharded": self._slots_sharded,
         }
 
     def kan_plan_source(self) -> str | None:

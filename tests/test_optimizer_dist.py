@@ -145,6 +145,79 @@ def test_quantize_error_feedback_reduces_bias():
 
 
 # ---------------------------------------------------------------------------
+# deployed-KAN bundle shipping (gather -> compress -> scatter)
+# ---------------------------------------------------------------------------
+
+
+def _kan_bundle(batch=8):
+    from repro.core.kan_layer import KANSpec, init_kan_network
+    from repro.core.kan_network_deploy import (
+        deploy_kan_network,
+        quantize_kan_network,
+    )
+
+    kspec = KANSpec(dims=(17, 17, 17), grid_size=5)
+    qparams = quantize_kan_network(
+        init_kan_network(jax.random.PRNGKey(0), kspec), kspec
+    )
+    return deploy_kan_network(qparams, kspec, batch=batch)
+
+
+def test_deployed_kan_compress_roundtrip_sharded():
+    """Checkpoint shipping for sharded deployments: gather a (placed)
+    bundle, int8-compress it, scatter it back onto a mesh — outputs must
+    match the original within the int8 weight-codec error, the scattered
+    bundle must carry the target placement, and a geometry mismatch must
+    refuse to decode."""
+    from repro.core.kan_network_deploy import (
+        kan_network_deploy_apply,
+        place_deployed_kan,
+    )
+    from repro.dist.compress import (
+        compress_deployed_kan,
+        decompress_deployed_kan,
+    )
+    from repro.launch.mesh import make_local_mesh
+
+    dep = _kan_bundle()
+    multi = len(jax.devices()) >= 2
+    mesh = make_local_mesh(1, 2) if multi else make_local_mesh(1, 1)
+    placed = place_deployed_kan(dep, mesh)  # gather side starts SHARDED
+
+    payload = compress_deployed_kan(placed)
+    for entry, lw in zip(payload["layers"], dep.layers):
+        assert entry["wc"][0].dtype == np.int8  # the bulk ships as int8
+        assert entry["wc"][0].shape == lw["wc"].shape  # gathered to global
+
+    dep2 = decompress_deployed_kan(payload, dep, mesh=mesh)
+    assert dep2.placement is mesh
+
+    x = jax.random.uniform(jax.random.PRNGKey(1), (6, 17), minval=-1, maxval=1)
+    y0 = kan_network_deploy_apply(dep, x, interpret=True)
+    y1 = kan_network_deploy_apply(dep2, x, interpret=True)  # sharded exec
+    # the int8 weight codec's error envelope: boundary re-coding can amplify
+    # a per-weight half-LSB, so a few percent of the output scale — far
+    # below anything a scatter/transpose/scale bug would produce
+    scale = float(jnp.abs(y0).max()) + 1e-6
+    assert float(jnp.abs(y1 - y0).max()) < 5e-2 * scale
+
+    # host-side decode (no mesh) agrees with the scattered one (model-
+    # sharded accumulation may re-tile, so tolerance rather than bits)
+    dep3 = decompress_deployed_kan(payload, dep, mesh=None)
+    assert dep3.placement is None
+    y2 = kan_network_deploy_apply(dep3, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                               atol=1e-5, rtol=1e-5)
+
+    other = _kan_bundle(batch=4)
+    import dataclasses as _dc
+
+    wrong = _dc.replace(other, dims=(17, 17, 14))
+    with pytest.raises(ValueError):
+        decompress_deployed_kan(payload, wrong)
+
+
+# ---------------------------------------------------------------------------
 # train loop (smoke config end-to-end with restart)
 # ---------------------------------------------------------------------------
 

@@ -10,7 +10,14 @@ Covers the PR's dispatch contract:
   * the acim backend is bit-exact vs "pallas" when every non-ideality is
     zeroed, reproducible under a fixed PRNG key, and degrades KAN1
     knot-classification accuracy by only a bounded amount at the paper's
-    measured sigmas (statistical envelope across 32 noise seeds).
+    measured sigmas (statistical envelope across 32 noise seeds);
+  * mesh-sharded execution (PR 4): 1x1 and data-only meshes are bit-exact
+    vs the unsharded path (pallas and quiet-acim), model-sharded runs keep
+    bit-exact boundary codes and match the layered ref within tolerance,
+    mesh/no-mesh plan-cache entries never collide, and non-divisible model
+    axes fall back to replicated columns with a recorded reason.  The
+    multi-device cases skip unless the host exposes >= 2 devices (CI forces
+    8 via XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 
 import os
@@ -266,6 +273,189 @@ def test_acim_accuracy_envelope_on_kan1_knot_task():
     assert mean_acc >= acc_pallas - 0.10, (mean_acc, acc_pallas)
     assert mean_acc <= acc_pallas + 0.03, (mean_acc, acc_pallas)
     assert min(accs) >= acc_pallas - 0.15, (min(accs), acc_pallas)
+
+
+# ----------------------------------------------------------------------------
+# mesh-sharded execution
+# ----------------------------------------------------------------------------
+
+_N_DEV = len(jax.devices())
+_NEED2 = pytest.mark.skipif(
+    _N_DEV < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def _mesh(data=1, model=1):
+    from repro.launch.mesh import make_local_mesh
+
+    return make_local_mesh(data, model)
+
+
+def _run_pair(dep, x, mesh, backend="pallas", **kw):
+    """(unsharded pallas, sharded ``backend``) outputs + boundary codes."""
+    y0, c0 = kan_network_deploy_apply(
+        dep, x, interpret=True, backend="pallas", return_intermediates=True
+    )
+    y1, c1 = kan_network_deploy_apply(
+        dep, x, interpret=True, backend=backend, mesh=mesh,
+        return_intermediates=True, **kw
+    )
+    return (y0, c0), (y1, c1)
+
+
+def _assert_bit_exact(a, b):
+    (y0, c0), (y1, c1) = a, b
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y0))
+    assert len(c0) == len(c1)
+    for x0, x1 in zip(c0, c1):
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x0))
+
+
+def test_sharded_1x1_mesh_bit_exact_vs_unsharded():
+    """The degenerate mesh is the strongest plumbing check and runs on any
+    host: shard_map + per-shard plan + boundary gather must be bitwise
+    invisible for pallas AND quiet-acim."""
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(6), (13, 17), minval=-1, maxval=1)
+    a, b = _run_pair(dep, x, _mesh(1, 1))
+    _assert_bit_exact(a, b)
+    a, b = _run_pair(dep, x, _mesh(1, 1), backend="acim",
+                     cim=runtime.quiet_cim_config(), key=jax.random.PRNGKey(9))
+    _assert_bit_exact(a, b)
+
+
+@_NEED2
+def test_data_sharded_pallas_bit_exact():
+    """Rows are independent through the whole datapath, so splitting the
+    batch bucket over "data" must not move a single bit — outputs and the
+    int boundary codes both."""
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(7), (11, 17), minval=-1, maxval=1)
+    a, b = _run_pair(dep, x, _mesh(data=2))
+    _assert_bit_exact(a, b)
+
+
+@_NEED2
+def test_data_sharded_quiet_acim_bit_exact():
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(8), (9, 17), minval=-1, maxval=1)
+    a, b = _run_pair(dep, x, _mesh(data=2), backend="acim",
+                     cim=runtime.quiet_cim_config(), key=jax.random.PRNGKey(3))
+    _assert_bit_exact(a, b)
+
+
+@_NEED2
+def test_model_sharded_codes_bit_exact_outputs_close_to_ref():
+    """Output-channel sharding: every shard owns whole MAC columns, so the
+    shard-local boundary requantizer emits the same int codes; the final
+    f32 output may re-tile its accumulation, so it is held to the layered
+    reference at the existing tolerance."""
+    kspec = KANSpec(dims=(17, 17, 17), grid_size=5)
+    qparams = quantize_kan_network(
+        init_kan_network(jax.random.PRNGKey(1), kspec), kspec
+    )
+    dep = deploy_kan_network(qparams, kspec, batch=8)
+    x = jax.random.uniform(jax.random.PRNGKey(9), (8, 17), minval=-1, maxval=1)
+    (y0, c0), (y1, c1) = _run_pair(
+        dep, x, _mesh(data=max(1, _N_DEV // 4), model=2)
+    )
+    for x0, x1 in zip(c0, c1):
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x0))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               atol=1e-5, rtol=1e-5)
+    ref = kan_network_apply_ref(qparams, x, kspec)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@_NEED2
+def test_model_sharded_ref_backend_matches():
+    kspec = KANSpec(dims=(17, 17, 17), grid_size=5)
+    qparams = quantize_kan_network(
+        init_kan_network(jax.random.PRNGKey(2), kspec), kspec
+    )
+    dep = deploy_kan_network(qparams, kspec, batch=8)
+    x = jax.random.uniform(jax.random.PRNGKey(10), (6, 17), minval=-1, maxval=1)
+    (y0, _), (y1, _) = _run_pair(dep, x, _mesh(1, 2), backend="ref")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mesh_and_unsharded_cache_entries_never_collide():
+    """The PlanKey mesh fingerprint keeps sharded and unsharded compiled
+    applies apart — and each re-resolution is a pure hit on its own entry."""
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(11), (5, 17), minval=-1, maxval=1)
+    mesh = _mesh(1, 1)
+    runtime.reset_cache()
+    kan_network_deploy_apply(dep, x, interpret=True)
+    kan_network_deploy_apply(dep, x, interpret=True, mesh=mesh)
+    stats = runtime.cache_stats()
+    assert stats["entries"] == 2 and stats["misses"] == 2, stats
+    kan_network_deploy_apply(dep, x, interpret=True)
+    kan_network_deploy_apply(dep, x, interpret=True, mesh=mesh)
+    stats = runtime.cache_stats()
+    assert stats["entries"] == 2 and stats["hits"] == 2, stats
+    assert stats["traces"] == 2, stats
+
+
+@_NEED2
+def test_acim_sharded_noise_seeded_and_reproducible():
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(12), (6, 17), minval=-1, maxval=1)
+    cim = CIMConfig(ir_gamma=0.06, sigma_ps_ref=0.05)
+    mesh = _mesh(data=2)
+    y1 = kan_network_deploy_apply(dep, x, interpret=True, backend="acim",
+                                  mesh=mesh, cim=cim, key=jax.random.PRNGKey(0))
+    y2 = kan_network_deploy_apply(dep, x, interpret=True, backend="acim",
+                                  mesh=mesh, cim=cim, key=jax.random.PRNGKey(0))
+    y3 = kan_network_deploy_apply(dep, x, interpret=True, backend="acim",
+                                  mesh=mesh, cim=cim, key=jax.random.PRNGKey(1))
+    y_p = kan_network_deploy_apply(dep, x, interpret=True, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert float(jnp.abs(y1 - y3).max()) > 0.0
+    assert float(jnp.abs(y1 - y_p).max()) > 0.0  # noise actually injected
+
+
+@pytest.mark.skipif(
+    _N_DEV < 3, reason="needs a 3-wide model axis to force the fallback"
+)
+def test_model_axis_fallback_replicates_and_records_reason():
+    """op=128 is not divisible by 3: every layer must fall back to
+    replicated columns (recorded in shard_notes) and stay bit-exact."""
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(13), (7, 17), minval=-1, maxval=1)
+    runtime.reset_cache()
+    a, b = _run_pair(dep, x, _mesh(1, 3))
+    _assert_bit_exact(a, b)
+    notes = [r for reasons in runtime.shard_notes().values() for r in reasons]
+    assert notes and any("not shardable" in r for r in notes), notes
+
+
+def test_use_mesh_scope_and_placement_resolution():
+    """mesh= arg > use_mesh scope > DeployedKAN.placement, all bit-exact on
+    the 1x1 mesh; replan keeps the placement."""
+    from repro.core.kan_network_deploy import place_deployed_kan
+
+    _, _, dep = _kan1()
+    x = jax.random.uniform(jax.random.PRNGKey(14), (5, 17), minval=-1, maxval=1)
+    mesh = _mesh(1, 1)
+    y0 = kan_network_deploy_apply(dep, x, interpret=True)
+    with runtime.use_mesh(mesh):
+        y1 = kan_network_deploy_apply(dep, x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y0))
+    placed = place_deployed_kan(dep, mesh)
+    assert placed.placement is mesh
+    assert placed.replan(64).placement is mesh
+    y2 = kan_network_deploy_apply(placed, x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y0))
+    # the placed bundle resolved through the mesh path: distinct cache key
+    runtime.reset_cache()
+    kan_network_deploy_apply(dep, x, interpret=True)
+    kan_network_deploy_apply(placed, x, interpret=True)
+    assert runtime.cache_stats()["entries"] == 2
 
 
 # ----------------------------------------------------------------------------

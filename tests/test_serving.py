@@ -184,6 +184,47 @@ def test_serve_engine_kan_backend_ref_matches_pallas_tokens():
     assert outs["ref"] == outs["pallas"]
 
 
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+def test_serve_engine_mesh_sharded_same_tokens():
+    """ServeEngine(mesh=...) — slot pool/KV on "data", KAN-FFN channels on
+    "model" — must serve exactly the tokens of the single-device engine on
+    the same request stream (the PR-4 acceptance criterion)."""
+    from repro import runtime
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(21)
+        reqs = []
+        for rid in range(3):
+            rng, k = jax.random.split(rng)
+            prompt = jax.random.randint(k, (6,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+        return reqs
+
+    runtime.reset_cache()
+    e0 = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
+    out0 = {r.rid: r.output for r in e0.run(make_reqs())}
+
+    n = len(jax.devices())
+    mesh = make_local_mesh(2, 2) if n >= 4 else make_local_mesh(2, 1)
+    e1 = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                     mesh=mesh)
+    out1 = {r.rid: r.output for r in e1.run(make_reqs())}
+    assert out0 == out1
+    layout = e1.compile_stats()["mesh"]
+    assert layout["axes"] == ["data", "model"]
+    assert layout["devices"] == layout["shape"][0] * layout["shape"][1]
+    assert e0.compile_stats()["mesh"] is None
+
+
 def test_rolling_window_cache_exceeding_window():
     """Decode past the window: rolling cache must equal full SWA attention."""
     cfg = smoke_config("mixtral-8x7b")
