@@ -19,7 +19,10 @@ transformer-FFN width (the qwen2.5-14b smoke KAN-FFN geometry).  Each row
 also reports executor throughput (rows through the KAN per second) and the
 run ends with the runtime plan-cache hit/miss/trace counters plus a small
 end-to-end served-tokens/s measurement of the continuous-batching engine on
-the fused datapath.  A SHARDED section then times the mesh-sharded runtime
+the fused datapath.  A SUSTAINED section then drives the async scheduler
+with a deterministic Poisson-ish arrival schedule of mixed-length prompts
+per runtime backend, recording TTFT p50/p95, inter-token latency, tokens/s
+and queue depth (the docs/serving.md metrics glossary).  A SHARDED section then times the mesh-sharded runtime
 (data-only and data x model meshes over every host device, plus a
 mesh-sharded engine leg), recording mesh shape and device count so the perf
 trajectory captures scaling — run under
@@ -124,6 +127,101 @@ def _bench_serve(requests: int, max_new: int, print_fn=print,
         f"mesh={None if mesh is None else 'x'.join(map(str, row['mesh']['shape']))}"
     )
     return row
+
+
+def _bench_sustained(requests: int, max_new: int, print_fn=print,
+                     mean_interarrival_s: float = 0.05,
+                     arrival_seed: int = 1234) -> dict:
+    """Sustained mixed load through the async scheduler, per backend.
+
+    A deterministic Poisson-ish arrival schedule (exponential inter-arrival
+    gaps from a fixed-seed generator — identical offsets every run and for
+    every backend) of mixed-length prompts is submitted to the scheduler
+    with future ``arrival_s`` offsets, so prompts prefill into free slots
+    *between* decode steps of earlier requests exactly as under live
+    traffic.  Each runtime backend (``ref`` / ``pallas`` / ``acim``) serves
+    the same schedule on a fresh engine after a one-request warmup (so TTFT
+    measures scheduling + prefill, not jit compilation), and the JSON
+    records the docs/serving.md metrics: TTFT p50/p95, inter-token latency,
+    tokens/s, queue depth over time.
+    """
+    import random as _random
+
+    from repro.configs.registry import smoke_config
+    from repro.models.model import init_params
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.scheduler import Scheduler
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    gen = _random.Random(arrival_seed)
+    offsets, t = [], 0.0
+    for _ in range(requests):
+        offsets.append(t)
+        t += gen.expovariate(1.0 / mean_interarrival_s)
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(1)
+        reqs = []
+        for rid in range(requests):
+            rng, k = jax.random.split(rng)
+            plen = 4 + rid % 7  # mixed lengths exercise the prefill buckets
+            prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt,
+                                max_new_tokens=max_new,
+                                arrival_s=offsets[rid]))
+        return reqs
+
+    rows = []
+    for backend in ("ref", "pallas", "acim"):
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             kan_deploy=True, kan_backend=backend)
+        # compile outside the timed window: decode + one prefill variant per
+        # length bucket the schedule will hit (lengths 4..10 -> buckets
+        # {8, 16}), so TTFT measures scheduling + prefill, not jit traces
+        buckets = {len(engine._padded_prompt([3] * (4 + r % 7)))
+                   for r in range(requests)}
+        warm = [Request(rid=-1 - i, prompt=[5] * ln, max_new_tokens=2)
+                for i, ln in enumerate(sorted(buckets))]
+        engine.run(warm)
+        # build the request list BEFORE the scheduler: its construction
+        # starts the arrival_s timebase, and prompt generation must not eat
+        # into the schedule (submit bumps past offsets to "now")
+        reqs = make_reqs()
+        sched = Scheduler(engine)
+        for r in reqs:
+            sched.submit(r)
+        sched.run_until_idle()
+        s = sched.stats()
+        row = {
+            "backend": backend,
+            "requests": requests,
+            "completed": s["completed"],
+            "tokens": s["tokens"],
+            "tokens_per_s": s["tokens_per_s"],
+            "ttft_p50_s": s["ttft_s"]["p50"],
+            "ttft_p95_s": s["ttft_s"]["p95"],
+            "itl_p50_s": s["itl_s"]["p50"],
+            "itl_p95_s": s["itl_s"]["p95"],
+            "queue_depth_max": s["queue_depth"]["max"],
+            "queue_depth_mean": s["queue_depth"]["mean"],
+        }
+        rows.append(row)
+        print_fn(
+            f"sustained,backend={backend},tokens={row['tokens']},"
+            f"tokens_per_s={row['tokens_per_s']:.1f},"
+            f"ttft_p50_ms={row['ttft_p50_s'] * 1e3:.1f},"
+            f"ttft_p95_ms={row['ttft_p95_s'] * 1e3:.1f},"
+            f"qdepth_max={row['queue_depth_max']}"
+        )
+    return {
+        "arch": "qwen2.5-14b-kanffn",
+        "slots": 2,
+        "arrival_seed": arrival_seed,
+        "mean_interarrival_s": mean_interarrival_s,
+        "arrival_offsets_s": offsets,
+        "rows": rows,
+    }
 
 
 def _bench_sharded(batch: int, repeats: int, serve_requests: int,
@@ -261,6 +359,8 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
                     f"tile_tuned={int(row['tile_tuned'])}")
         print_fn(msg)
     serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn)
+    sustained = _bench_sustained(serve_requests + 2, serve_max_new,
+                                 print_fn=print_fn)
     sharded = _bench_sharded(batch, repeats, serve_requests, serve_max_new,
                              print_fn=print_fn)
     cache = runtime.cache_stats()  # after the serve legs: they share the cache
@@ -272,6 +372,7 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
         "device_count": len(jax.devices()),
         "rows": rows,
         "serve": serve,
+        "sustained": sustained,
         "sharded": sharded,
         "plan_cache": cache,
     }

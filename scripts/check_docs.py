@@ -1,0 +1,171 @@
+"""Docs health check: links resolve, anchors exist, snippets actually run.
+
+Two failure modes make documentation rot silently: a moved/renamed file
+leaves dangling intra-repo links, and an API change leaves quickstart
+snippets that no longer execute.  This script closes both for `README.md`
+and every markdown file under `docs/`:
+
+  * **links** — every relative markdown link `[text](path#anchor)` must
+    point at an existing file inside the repo, and, when it carries an
+    anchor, at a real heading of the target file (GitHub-style slugs,
+    including the `-1` suffixes for duplicate headings).  External links
+    (`http://`, `https://`, `mailto:`) are skipped — this is an offline
+    check.
+  * **snippets** — every fenced code block tagged ```` ```python ```` is
+    executed (Pallas kernels auto-select interpret mode off-TPU, so the
+    snippets run on a CPU container).  Blocks in the same file share one
+    namespace, so a later block may build on an earlier one's imports.
+    Tag a block ```` ```python no-run ```` to document code the check
+    must not execute (e.g. the tune walkthrough, which trains a network).
+
+CI runs this as the `docs` job:
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", *sorted(
+    p.relative_to(REPO).as_posix() for p in (REPO / "docs").glob("**/*.md")
+)]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+FENCE_RE = re.compile(r"^```(.*)$")
+
+
+def strip_code_blocks(text: str) -> str:
+    """Remove fenced blocks so code-looking brackets aren't parsed as links."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def heading_slugs(md_text: str) -> set:
+    """GitHub-style anchor slugs for every heading (with -N dedup suffixes)."""
+    slugs: set = set()
+    counts: dict = {}
+    for line in strip_code_blocks(md_text).splitlines():
+        m = re.match(r"^#{1,6}\s+(.*)$", line)
+        if not m:
+            continue
+        raw = re.sub(r"`([^`]*)`", r"\1", m.group(1).strip())  # drop code ticks
+        slug = re.sub(r"[^\w\- ]", "", raw.lower(), flags=re.UNICODE)
+        slug = slug.replace(" ", "-")
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_links(relpath: str, text: str, slug_cache: dict) -> list:
+    errors = []
+    base = (REPO / relpath).parent
+    for target in LINK_RE.findall(strip_code_blocks(text)):
+        target = target.split()[0].strip("<>")  # drop "title" suffixes
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (REPO / relpath) if not path_part else (base / path_part)
+        try:
+            dest = dest.resolve()
+            dest.relative_to(REPO)
+        except ValueError:
+            errors.append(f"{relpath}: link escapes the repo: {target}")
+            continue
+        if not dest.exists():
+            errors.append(f"{relpath}: broken link: {target}")
+            continue
+        if anchor:
+            if dest.suffix.lower() != ".md":
+                errors.append(
+                    f"{relpath}: anchor on non-markdown target: {target}"
+                )
+                continue
+            if dest not in slug_cache:
+                slug_cache[dest] = heading_slugs(
+                    dest.read_text(encoding="utf-8")
+                )
+            if anchor.lower() not in slug_cache[dest]:
+                errors.append(
+                    f"{relpath}: missing anchor #{anchor} in "
+                    f"{dest.relative_to(REPO).as_posix()}"
+                )
+    return errors
+
+
+def iter_snippets(text: str):
+    """Yield (info_string, first_line_no, source) for every fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m:
+            info = m.group(1).strip()
+            body, start = [], i + 2  # 1-indexed first body line
+            i += 1
+            while i < len(lines) and not FENCE_RE.match(lines[i]):
+                body.append(lines[i])
+                i += 1
+            yield info, start, "\n".join(body)
+        i += 1
+
+
+def run_snippets(relpath: str, text: str) -> tuple:
+    """Execute the runnable python blocks of one file; returns (ran, errors)."""
+    ran, errors = 0, []
+    namespace: dict = {"__name__": f"docs_snippet[{relpath}]"}
+    for info, line, src in iter_snippets(text):
+        tags = info.split()
+        if not tags or tags[0] != "python" or "no-run" in tags:
+            continue
+        t0 = time.perf_counter()
+        try:
+            exec(compile(src, f"{relpath}:{line}", "exec"), namespace)
+            ran += 1
+            print(f"  snippet {relpath}:{line} ok "
+                  f"({time.perf_counter() - t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001 — report, don't crash the check
+            errors.append(f"{relpath}:{line}: snippet failed: {e!r}")
+    return ran, errors
+
+
+def main() -> int:
+    sys.path.insert(0, str(REPO / "src"))
+    all_errors: list = []
+    slug_cache: dict = {}
+    total_links = total_snips = 0
+    for relpath in DOC_FILES:
+        text = (REPO / relpath).read_text(encoding="utf-8")
+        link_errors = check_links(relpath, text, slug_cache)
+        n_links = len(LINK_RE.findall(strip_code_blocks(text)))
+        total_links += n_links
+        print(f"{relpath}: {n_links} links, "
+              f"{len(link_errors)} broken")
+        all_errors += link_errors
+        ran, snip_errors = run_snippets(relpath, text)
+        total_snips += ran
+        all_errors += snip_errors
+    print(f"checked {len(DOC_FILES)} files: {total_links} links, "
+          f"{total_snips} snippets executed")
+    if all_errors:
+        print("\nFAIL:")
+        for e in all_errors:
+            print(f"  {e}")
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

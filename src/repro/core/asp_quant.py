@@ -135,7 +135,9 @@ def quantize_input(x: jax.Array, spec: ASPQuantSpec) -> jax.Array:
 
     Codes are LEFT-aligned on the knot grid: code q corresponds to
     x = lo + q * code_step, so code q's knot interval is exactly q >> LD.
-    This zero offset between grids is the Alignment property.
+    This zero offset between grids is the Alignment property (paper §3.1
+    phase one, eq. (4): the quantization grid is an integer multiple of
+    the knot grid).
     """
     scale = 1.0 / spec.code_step
     q = jnp.floor((x - spec.lo) * scale + 0.5).astype(jnp.int32)
@@ -143,6 +145,7 @@ def quantize_input(x: jax.Array, spec: ASPQuantSpec) -> jax.Array:
 
 
 def dequantize_input(codes: jax.Array, spec: ASPQuantSpec) -> jax.Array:
+    """Inverse affine map of :func:`quantize_input` (code grid -> floats)."""
     return spec.lo + codes.astype(jnp.float32) * spec.code_step
 
 
@@ -153,6 +156,10 @@ def dequantize_input(codes: jax.Array, spec: ASPQuantSpec) -> jax.Array:
 
 def build_lut(spec: ASPQuantSpec) -> dict:
     """Build the shared LUT of active-basis values (host-side, numpy).
+
+    The payoff of Alignment-Symmetry (paper §3.1, Fig. 3): ONE table of
+    (2**LD, K+1) bump values serves every basis function of every input
+    feature, and its mirror symmetry halves the physical storage ("hemi").
 
     Returns dict with:
       "lut":      (2**LD, K+1) float64, lut[u, d] = value of the d-th active
@@ -194,6 +201,9 @@ def _flat_index_arrays(spec: ASPQuantSpec):
 def hemi_fold(lut_q: np.ndarray, spec: ASPQuantSpec) -> np.ndarray:
     """Fold the full (2**LD, K+1) table into hemi storage using symmetry.
 
+    The Sharable-Hemi LUT (paper §3.1, Fig. 3): the cardinal bump's mirror
+    symmetry b_K(t) = b_K(K+1-t) means the table's second half duplicates
+    its first, so silicon stores 50% + 1 entries and reflects on retrieval.
     Flat bump position f = s*2**LD + u  (t = f / 2**LD in [0, K+1)) satisfies
     b(t) = b(K+1 - t), i.e. value at f equals value at total - f.  Physical
     storage keeps f in [0, total//2]; larger f are reflected on retrieval.
@@ -226,7 +236,8 @@ def lookup_active(codes: jax.Array, lut: jax.Array, spec: ASPQuantSpec):
     """Active-basis retrieval: code -> (global g, (..., K+1) active values).
 
     ``lut`` is the (2**LD, K+1) table (float or dequantized).  This is the
-    PowerGap bit split: shift/mask replaces the paper's decoders.
+    PowerGap bit split (paper §3.1 phase two, eq. (5)): shift/mask replaces
+    the paper's split (n-LD)-bit / LD-bit decoders.
     """
     g = jax.lax.shift_right_logical(codes, spec.ld)
     local = jax.lax.bitwise_and(codes, spec.codes_per_interval - 1)

@@ -60,6 +60,10 @@ class CIMConfig:
 def irdrop_factors(cfg: CIMConfig, col_load: jax.Array) -> jax.Array:
     """Effective-weight attenuation (rows, cols).
 
+    The systematic IR-drop model behind the paper's Fig. 12 array-size
+    sweep (and the term KAN-SAM's §3.3 placement minimizes the residual
+    of):
+
     factor[p, c] = 1 - ir_scale * ((p+1)/rows) * col_load[c]
     where physical row p=0 is nearest the clamp and col_load is the column's
     normalized current (0..1).
@@ -82,7 +86,10 @@ def cim_matmul(
     x_max: float | None = None,
     adc_calibrate: bool = False,
 ) -> jax.Array:
-    """Simulated ACIM MAC.
+    """Simulated ACIM MAC — the paper's non-ideality evaluation regime
+    (§2.2 circuit, Fig. 12/13 figures): statistics calibrated from the
+    TSMC 22nm RRAM-ACIM prototype measurements, applied to the ideal
+    x @ w in code domain.
 
     Args:
       x: (B, R) non-negative WL input codes (float or int), already in

@@ -37,6 +37,9 @@ __all__ = [
 def basis_activation_probability(x_samples: jax.Array, spec: ASPQuantSpec) -> jax.Array:
     """P_i = fraction of inputs for which B_i is active (g <= i <= g+K).
 
+    The sparsity KAN-SAM exploits (paper §3.3): B-spline locality means
+    only the K+1 bases of the input's knot interval fire, so for G >> K
+    most word-line rows are idle most of the time — and unequally so.
     x_samples: (..., ) calibration inputs for ONE input feature (or pooled).
     Returns (G+K,) probabilities.
     """
@@ -67,6 +70,10 @@ def row_activation_weight(
 
 def sam_permutation(row_weight: jax.Array, array_rows: int | None = None) -> np.ndarray:
     """perm[p] = logical row placed at physical (flat) position p.
+
+    The KAN sparsity-aware mapping strategy itself (paper §3.3) adapted to
+    mean-compensated columns — see the module docstring for why the target
+    distance is the compensated mean rather than the clamp.
 
     Physical distance from the BL clamp of flat position p is
     ((p % array_rows) + 1) / array_rows; deployment compensates each column

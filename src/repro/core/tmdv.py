@@ -40,7 +40,14 @@ __all__ = ["TMDVConfig", "TD_A", "TD_P", "PURE_VOLTAGE", "PURE_PWM", "apply_inpu
 
 @dataclasses.dataclass(frozen=True)
 class TMDVConfig:
-    """total_bits = 2N in the paper; voltage_bits = bits carried by V."""
+    """One TM-DV-IG operating point (paper §3.2).
+
+    ``total_bits`` = 2N in the paper; ``voltage_bits`` = the bits carried
+    by the DAC voltage level (the rest ride in the pulse width).  The
+    paper's N:1 design point is the even split; sliding it reproduces the
+    TD-P / TD-A modes and the pure-voltage / pure-PWM baselines of
+    Fig. 11.
+    """
 
     total_bits: int = 8
     voltage_bits: int = 4
@@ -65,12 +72,14 @@ class TMDVConfig:
 
 
 def TD_A(total_bits: int = 8) -> TMDVConfig:
-    """High-accuracy mode: fewer voltage levels (N_v = total/2 - 1)."""
+    """High-accuracy mode (paper §3.2): fewer voltage levels
+    (N_v = total/2 - 1) — wider noise margins, more pulse slots."""
     return TMDVConfig(total_bits=total_bits, voltage_bits=max(1, total_bits // 2 - 1))
 
 
 def TD_P(total_bits: int = 8) -> TMDVConfig:
-    """High-performance mode: more voltage levels (N_v = total/2 + 1)."""
+    """High-performance mode (paper §3.2): more voltage levels
+    (N_v = total/2 + 1) — fewer pulse slots (faster WL), tighter margins."""
     return TMDVConfig(total_bits=total_bits, voltage_bits=min(total_bits - 1, total_bits // 2 + 1))
 
 
@@ -83,7 +92,12 @@ def PURE_PWM(total_bits: int = 8) -> TMDVConfig:
 
 
 def wl_latency_units(cfg: TMDVConfig) -> int:
-    """WL activation window in unit pulses: the time field must fit."""
+    """WL activation window in unit pulses: the time field must fit.
+
+    The latency half of the §3.2 trade (and the latency axis of the
+    Fig. 11 comparison): moving a bit from time to voltage halves the
+    window, at the cost of doubling the DAC level count (sigma_v grows).
+    """
     return max(1, 2**cfg.time_bits)
 
 
@@ -91,6 +105,9 @@ def apply_input_noise(codes: jax.Array, cfg: TMDVConfig, key) -> jax.Array:
     """codes (int, in [0, 2**total_bits - 1]) -> noisy effective charge.
 
     Returns float "effective code" = Q / (I_u * W_p1); ideal value == codes.
+    This is the input-generator error term of the paper's non-ideality
+    evaluation (Fig. 11 compares the three input methods; the acim runtime
+    backend and ``core.cim.cim_matmul`` inject it ahead of the MAC).
     """
     codes = codes.astype(jnp.float32)
     tmask = float(2**cfg.time_bits - 1) if cfg.time_bits > 0 else 0.0

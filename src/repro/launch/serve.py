@@ -1,7 +1,13 @@
-"""Serving entrypoint: continuous-batching engine over a (smoke) model.
+"""Serving entrypoint: async streaming scheduler over a (smoke) model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --requests 8 --slots 4
+    # stream tokens as they are produced, sample instead of greedy decode:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --stream --sampling 0.8 --top-k 16 --seed 7
+    # bounded queue + per-request deadlines (admission/backpressure demo):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --requests 16 --queue-limit 4 --deadline 2.0
     # the paper's datapath, with hardware non-idealities:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --kan-ffn --backend acim
@@ -26,6 +32,7 @@ import jax
 from ..configs.registry import smoke_config
 from ..models.model import init_params
 from ..serve.engine import Request, ServeEngine
+from ..serve.scheduler import QueueFull, SamplingParams, Scheduler
 
 
 def main():
@@ -35,6 +42,32 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--kan-ffn", action="store_true")
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="print every token as the scheduler produces it (on_token "
+             "streaming) instead of only per-request completion lines",
+    )
+    ap.add_argument(
+        "--sampling", type=float, default=0.0, metavar="TEMP",
+        help="decode temperature; 0 (default) = greedy argmax, >0 samples "
+             "with --top-k/--top-p under --seed (reproducible)",
+    )
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the K highest logits (0=off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0=off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed (per-request streams fold rid)")
+    ap.add_argument(
+        "--queue-limit", type=int, default=None, metavar="N",
+        help="bounded scheduler queue: submissions past N waiting requests "
+             "are rejected (admission backpressure); default unbounded",
+    )
+    ap.add_argument(
+        "--deadline", type=float, default=None, metavar="S",
+        help="per-request queueing deadline in seconds: a request still "
+             "waiting after S is expired unserved",
+    )
     ap.add_argument(
         "--backend", default=None, choices=("ref", "pallas", "acim"),
         help="KAN executor backend (with --kan-ffn); default resolves via "
@@ -103,6 +136,14 @@ def main():
               f"n_bits={cfg.kan_n_bits}, plan source: "
               f"{engine.kan_plan_source()}{tuned_note}")
 
+    sampling = None
+    if args.sampling > 0.0:
+        sampling = SamplingParams(temperature=args.sampling, top_k=args.top_k,
+                                  top_p=args.top_p, seed=args.seed)
+        print(f"sampling: temperature={sampling.temperature} "
+              f"top_k={sampling.top_k} top_p={sampling.top_p} "
+              f"seed={sampling.seed}")
+
     rng = jax.random.PRNGKey(1)
     reqs = []
     for rid in range(args.requests):
@@ -110,17 +151,48 @@ def main():
         plen = int(4 + jax.random.randint(k, (), 0, 9))  # mixed-length stream
         rng, k = jax.random.split(rng)
         prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
-        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+        reqs.append(Request(rid=rid, prompt=prompt,
+                            max_new_tokens=args.max_new,
+                            deadline_s=args.deadline, sampling=sampling))
+
+    sched = Scheduler(engine, max_queue=args.queue_limit,
+                      log=None if args.stream else print)
+    on_token = None
+    if args.stream:
+        on_token = lambda r, tok: print(f"  req {r.rid} += {tok}", flush=True)
+    dropped = 0
+    for r in reqs:
+        try:
+            sched.submit(r, on_token=on_token)
+        except QueueFull as e:
+            dropped += 1
+            print(f"backpressure: {e}")
     t0 = time.perf_counter()
-    results = engine.run(reqs, log=print)
+    results = sched.run_until_idle()
     wall = time.perf_counter() - t0
-    total = sum(len(r.output) for r in results)
+    served = [r for r in results if r.status == "done"]
+    total = sum(len(r.output) for r in served)
     stats = engine.compile_stats()
-    print(f"served {len(results)} requests / {total} tokens "
-          f"({total / wall:.1f} tok/s)")
+    print(f"served {len(served)} requests / {total} tokens "
+          f"({total / wall:.1f} tok/s)"
+          + (f"; {dropped} rejected at submit" if dropped else ""))
     print(f"compiles: prefill={stats['prefill_traces']} "
           f"decode={stats['decode_traces']}; "
           f"kan plan cache: {stats['plan_cache']}")
+    # shutdown metrics summary (the docs/serving.md glossary)
+    s = sched.stats()
+
+    def _ms(v):
+        return "n/a" if v is None else f"{v * 1e3:.1f}ms"
+
+    print(f"scheduler: submitted={s['submitted']} completed={s['completed']} "
+          f"expired={s['expired']} rejected={s['rejected']}")
+    print(f"  ttft p50={_ms(s['ttft_s']['p50'])} p95={_ms(s['ttft_s']['p95'])}"
+          f"; itl p50={_ms(s['itl_s']['p50'])} p95={_ms(s['itl_s']['p95'])}"
+          f"; tokens/s={0.0 if s['tokens_per_s'] is None else s['tokens_per_s']:.1f}")
+    print(f"  queue depth max={s['queue_depth']['max']} "
+          f"mean={s['queue_depth']['mean']:.2f} "
+          f"over {s['queue_depth']['samples']} samples")
     if mesh is not None:
         from .. import runtime
 

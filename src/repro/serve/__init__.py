@@ -1,0 +1,27 @@
+"""Serving layer: slot-based engine + async streaming scheduler.
+
+:mod:`repro.serve.engine` owns the state (slot pool, KV cache, compiled
+prefill/decode); :mod:`repro.serve.scheduler` owns the event loop
+(arrivals, admission/backpressure, deadlines, streaming callbacks, seeded
+sampling, TTFT/throughput metrics).  See ``docs/serving.md``.
+"""
+
+from .engine import Request, ServeEngine, prefill_bucketing_supported
+from .scheduler import (
+    ManualClock,
+    QueueFull,
+    SamplingParams,
+    Scheduler,
+    sample_token,
+)
+
+__all__ = [
+    "ManualClock",
+    "QueueFull",
+    "Request",
+    "SamplingParams",
+    "Scheduler",
+    "ServeEngine",
+    "prefill_bucketing_supported",
+    "sample_token",
+]

@@ -1,11 +1,18 @@
 """Batched serving engine: slot-based continuous batching.
 
 A fixed pool of B decode slots; each slot holds one active request.  New
-requests are prefillied into a free slot (per-slot cache splice), decode
+requests are prefilled into a free slot (per-slot cache splice), decode
 advances ALL active slots with one compiled step, finished slots (EOS or
 max_tokens) are immediately refilled from the queue — the standard
 continuous-batching loop (vLLM-style, without paging) on top of
 models.model.{prefill, decode_step}.
+
+The engine owns the *state* (params, slot pool, KV cache, compiled steps);
+the *loop* lives in :mod:`repro.serve.scheduler`, which adds arrival times,
+admission/backpressure, deadlines, per-token streaming callbacks, seeded
+sampling and TTFT/throughput metrics on top of the same internals.
+``run()`` is kept as the thin synchronous driver over that scheduler and
+decodes exactly the tokens the pre-scheduler loop did.
 
 Compile behavior: decode compiles once; prefill pads prompts to
 power-of-two length buckets so a mixed-length request stream compiles
@@ -36,7 +43,6 @@ decode_32k serve_step that the dry-run lowers at production shapes.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -68,10 +74,18 @@ class Request:
     prompt: list                 # token ids
     max_new_tokens: int = 32
     eos_id: int = 2
-    # filled by the engine:
+    # scheduling inputs (consumed by repro.serve.scheduler; the defaults
+    # reproduce the classic run() semantics — arrive immediately, never
+    # expire, greedy decode — so pre-scheduler call sites work unchanged):
+    arrival_s: float = 0.0       # offset from scheduler start; 0 = now
+    deadline_s: float | None = None  # max queued seconds before expiry
+    sampling: Any = None         # SamplingParams, or None for greedy
+    # filled by the engine/scheduler:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
-    latency_s: float = 0.0
+    status: str = "pending"      # pending -> queued -> running -> done|expired
+    latency_s: float = 0.0       # admission -> last token
+    ttft_s: float = 0.0          # arrival -> first token
 
 
 class ServeEngine:
@@ -133,7 +147,6 @@ class ServeEngine:
             )
         self.pos = np.zeros(slots, np.int32)
         self.active: list[Request | None] = [None] * slots
-        self._t0 = {}
         self.prefill_traces = 0
         self.decode_traces = 0
 
@@ -173,8 +186,27 @@ class ServeEngine:
         return list(prompt) + [0] * (lb - len(prompt))
 
     def _admit(self, req: Request):
+        """Prefill ``req`` into a free slot and greedily pick its first token.
+
+        The scheduler calls :meth:`_prefill_slot` directly (it owns token
+        selection — sampling — and metrics); this wrapper keeps the classic
+        greedy admission for direct engine use.
+        """
         slot = self._free_slot()
-        assert slot is not None
+        if slot is None:
+            raise RuntimeError(
+                f"ServeEngine._admit: no free slot for request {req.rid} "
+                f"(all {self.slots} busy); check _free_slot() before admitting"
+            )
+        logits = self._prefill_slot(slot, req)
+        req.output.append(int(np.argmax(logits)))
+
+    def _prefill_slot(self, slot: int, req: Request) -> np.ndarray:
+        """B=1 prefill of ``req`` into pool ``slot``; returns the (V,)
+        first-token logits.  Splices the prompt's cache into the pool and
+        activates the slot — everything about admission EXCEPT choosing the
+        first token, which the caller does (greedy in ``_admit``, sampling
+        and timing in the scheduler)."""
         plen = len(req.prompt)
         # prefill the request alone (B=1), splice its cache into the pool
         tokens = jnp.asarray([self._padded_prompt(req.prompt)], jnp.int32)
@@ -197,47 +229,29 @@ class ServeEngine:
 
         self.cache = jax.tree.map(splice, self.cache, cache1)
         self.pos[slot] = plen
-        first = int(jnp.argmax(logits[0]))
-        req.output.append(first)
         self.active[slot] = req
-        self._t0[req.rid] = time.perf_counter()
+        return np.asarray(logits[0])
 
     # -- main loop --------------------------------------------------------
 
     def run(self, requests: list, log: Callable = lambda *_: None):
-        queue = list(requests)
-        results = []
-        while queue or any(r is not None for r in self.active):
-            while queue and self._free_slot() is not None:
-                self._admit(queue.pop(0))
-                log(f"admitted request; {len(queue)} queued")
-            # one decode step for the whole pool
-            tokens = np.zeros(self.slots, np.int32)
-            for i, r in enumerate(self.active):
-                if r is not None:
-                    tokens[i] = r.output[-1]
-            with runtime.use_backend(self.kan_backend), \
-                    runtime.use_mesh(self.mesh):
-                logits, self.cache = self._decode(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(self.pos),
-                )
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, r in enumerate(self.active):
-                if r is None:
-                    continue
-                self.pos[i] += 1
-                tok = int(nxt[i])
-                r.output.append(tok)
-                if (tok == r.eos_id or len(r.output) >= r.max_new_tokens
-                        or self.pos[i] >= self.max_len - 1):
-                    r.done = True
-                    r.latency_s = time.perf_counter() - self._t0[r.rid]
-                    results.append(r)
-                    self.active[i] = None
-                    log(f"request {r.rid} done ({len(r.output)} tokens, "
-                        f"{r.latency_s:.2f}s)")
-        return results
+        """Serve a batch synchronously; returns requests in completion order.
+
+        Thin driver over :class:`repro.serve.scheduler.Scheduler`: submit
+        everything up front (default ``arrival_s=0`` — all available
+        immediately), run the event loop to idle.  FIFO admission into free
+        slots + one pooled decode step per round is exactly the
+        pre-scheduler loop, so greedy token streams are bit-identical to
+        it; per-request deadlines/sampling fields are honored if callers
+        set them.  Use the scheduler directly for streaming callbacks,
+        backpressure and metrics.
+        """
+        from .scheduler import Scheduler
+
+        sched = Scheduler(self, log=log)
+        for req in requests:
+            sched.submit(req)
+        return sched.run_until_idle()
 
     def compile_stats(self) -> dict:
         """Engine-level trace counts + the runtime plan-cache counters."""

@@ -1,0 +1,463 @@
+"""Async streaming serve scheduler: event-driven continuous batching.
+
+:class:`ServeEngine` owns the slot pool, the compiled prefill/decode steps
+and the KV cache; this module owns *when* those steps run.  The scheduler
+turns the engine's synchronous ``run(requests)`` batch loop into an
+event-driven loop over a request queue:
+
+  * **admission / backpressure** — a bounded queue (``max_queue``; a full
+    queue rejects with :class:`QueueFull`) of requests carrying arrival
+    times (``Request.arrival_s``, an offset from scheduler start — future
+    arrivals model a live traffic trace) and optional per-request deadlines
+    (``Request.deadline_s``: the max time a request may wait in the queue
+    before it is expired unserved);
+  * **decoupled prefill/decode** — each scheduling round first prefills
+    waiting prompts into whatever slots are free (B=1 prefill + cache
+    splice, exactly the engine's admission path) and then advances ALL
+    active slots with one compiled decode step, so new prompts slip into
+    the pool between decode steps instead of gating on the whole batch;
+  * **streaming** — per-request ``on_token(request, token)`` /
+    ``on_done(request)`` callbacks fire as tokens are produced, so callers
+    consume output incrementally instead of waiting for ``run()`` to
+    return;
+  * **sampling** — per-request :class:`SamplingParams` (temperature /
+    top-k / top-p, explicitly seeded, reproducible run to run) next to the
+    default greedy argmax.  Greedy requests decode **bit-identical** token
+    streams to ``ServeEngine.run()`` — ``run()`` is in fact a thin
+    synchronous driver over this scheduler;
+  * **metrics** — per-request TTFT and inter-token latencies plus
+    aggregate tokens/s, queue-depth-over-time samples and admission
+    counters, snapshotted by :meth:`Scheduler.stats` (see
+    ``docs/serving.md`` for the metrics glossary).
+
+Time comes from an injectable clock (wall ``time.perf_counter`` by
+default); :class:`ManualClock` makes arrival/deadline behavior
+deterministic for tests and simulation.
+
+    sched = Scheduler(engine, max_queue=64)
+    sched.submit(Request(rid=0, prompt=[...]), on_token=lambda r, t: ...)
+    sched.run_until_idle()
+    print(sched.stats())
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import runtime
+
+__all__ = [
+    "ManualClock",
+    "QueueFull",
+    "SamplingParams",
+    "Scheduler",
+    "sample_token",
+]
+
+
+class QueueFull(RuntimeError):
+    """Raised by :meth:`Scheduler.submit` when the bounded queue is full."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode sampling policy (attach as ``Request.sampling``).
+
+    ``temperature <= 0`` means greedy argmax — bit-identical to the
+    engine's own selection, so a mixed greedy/sampled pool is safe.  With
+    ``temperature > 0`` the logits are divided by the temperature, then
+    restricted to the ``top_k`` highest (0 = no limit) and to the smallest
+    nucleus whose probability mass reaches ``top_p``, and the token is
+    drawn from the renormalized remainder.  Every draw is keyed by
+    ``(seed, rid, position)`` — fixed seed, fixed stream: runs reproduce
+    exactly, and concurrent requests never share a PRNG stream.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0 (0 = greedy)")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 = unrestricted)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+class ManualClock:
+    """Deterministic clock for tests/simulation: time moves only on demand."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("time only moves forward")
+        self._t += float(dt)
+
+
+def sample_token(logits: np.ndarray, params: SamplingParams, rid: int,
+                 position: int) -> int:
+    """Draw one token id from a logits row under ``params``.
+
+    Pure function of (logits, params, rid, position): the PRNG key is
+    ``fold_in(fold_in(PRNGKey(seed), rid), position)``, so each request has
+    its own reproducible stream regardless of scheduling order.
+    """
+    if params.greedy:
+        return int(np.argmax(logits))
+    row = np.asarray(logits, np.float64) / max(params.temperature, 1e-6)
+    if 0 < params.top_k < row.size:
+        kth = np.partition(row, -params.top_k)[-params.top_k]
+        row = np.where(row < kth, -np.inf, row)
+    if params.top_p < 1.0:
+        order = np.argsort(-row, kind="stable")
+        probs = np.exp(row[order] - row[order[0]])
+        probs /= probs.sum()
+        cum = np.cumsum(probs)
+        # smallest prefix with mass >= top_p; the head token always stays
+        cut = int(np.searchsorted(cum, params.top_p)) + 1
+        drop = order[cut:]
+        row[drop] = -np.inf
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(params.seed), rid), position
+    )
+    return int(jax.random.categorical(key, jnp.asarray(row, jnp.float32)))
+
+
+def _pct(xs: list, q: float) -> float | None:
+    """Nearest-rank percentile of a small sample (None when empty)."""
+    if not xs:
+        return None
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, round(q * (len(s) - 1))))]
+
+
+def _summary(xs: list) -> dict:
+    return {
+        "n": len(xs),
+        "mean": (sum(xs) / len(xs)) if xs else None,
+        "p50": _pct(xs, 0.50),
+        "p95": _pct(xs, 0.95),
+    }
+
+
+class Scheduler:
+    """Event-driven continuous batching over one :class:`ServeEngine`.
+
+    The scheduler mutates the engine's slot pool / cache through the same
+    internals ``run()`` used (``_free_slot`` / ``_prefill_slot`` /
+    ``_decode``); one scheduler per engine at a time.
+    """
+
+    def __init__(self, engine, max_queue: int | None = None, clock=None,
+                 log: Callable | None = None):
+        self.engine = engine
+        self.max_queue = max_queue
+        self._clock = clock
+        self._now = clock.now if clock is not None else time.perf_counter
+        self._t0 = self._now()
+        self.log = log or (lambda *_: None)
+        self.queue: list = []                  # submitted, not yet admitted
+        self.finished: list = []               # completion order (+ expired)
+        self._on_token: dict[int, Callable] = {}
+        self._on_done: dict[int, Callable] = {}
+        self._rec: dict[int, dict] = {}        # ACTIVE rid -> timing record
+        self.submitted = 0
+        self.completed = 0
+        self.expired = 0
+        self.rejected = 0
+        self.decode_steps = 0
+        # bounded metric state: per-request records live only while the
+        # request is active (<= slots of them); finished requests leave
+        # behind scalars/capped samples, so a long-lived scheduler's
+        # footprint does not grow with total requests served.  finished
+        # itself is the caller's to drain (drain_finished()).
+        self._ttfts: collections.deque = collections.deque(maxlen=4096)
+        self._itls: collections.deque = collections.deque(maxlen=4096)
+        self._tokens_done = 0                  # tokens of finished requests
+        self._span_start: float | None = None  # first admission
+        self._span_end: float | None = None    # last emitted token
+        self._depth_samples: collections.deque = collections.deque(
+            maxlen=4096)                       # (elapsed_s, depth) trace tail
+        self._depth_rounds = 0
+        self._depth_sum = 0
+        self._depth_max = 0
+
+    # -- time -------------------------------------------------------------
+
+    def elapsed(self) -> float:
+        """Seconds since scheduler construction (the arrival_s timebase)."""
+        return self._now() - self._t0
+
+    def _wait(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        if self._clock is not None and hasattr(self._clock, "advance"):
+            self._clock.advance(dt)
+        else:
+            time.sleep(dt)
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, req, on_token: Callable | None = None,
+               on_done: Callable | None = None):
+        """Enqueue a request; raises :class:`QueueFull` on backpressure.
+
+        ``req.arrival_s`` earlier than now is bumped to the submission
+        instant (you cannot arrive in the past); a future value keeps the
+        request invisible to admission until that offset — the hook the
+        sustained-load benchmark drives its deterministic arrival schedule
+        through.
+        """
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.rejected += 1
+            raise QueueFull(
+                f"queue full ({len(self.queue)}/{self.max_queue}); "
+                f"request {req.rid} rejected"
+            )
+        req.arrival_s = max(float(req.arrival_s), self.elapsed())
+        req.status = "queued"
+        self.queue.append(req)
+        self.submitted += 1
+        self._on_token[req.rid] = on_token
+        self._on_done[req.rid] = on_done
+        return req
+
+    # -- one scheduling round --------------------------------------------
+
+    def step(self) -> bool:
+        """Expire, admit, then advance the pool by one decode step.
+
+        Returns True if any progress was made (a prefill or a decode ran);
+        False means the scheduler is idle right now — either fully drained,
+        or every queued request has a future arrival time.
+        """
+        now = self.elapsed()
+        self._expire(now)
+        progressed = self._admit_arrived(now)
+        depth = len(self.queue)
+        self._depth_samples.append((now, depth))
+        self._depth_rounds += 1
+        self._depth_sum += depth
+        self._depth_max = max(self._depth_max, depth)
+        if any(r is not None for r in self.engine.active):
+            self._decode_round()
+            progressed = True
+        return progressed
+
+    def run_until_idle(self) -> list:
+        """Drive :meth:`step` until queue and pool drain; returns finished.
+
+        When the only remaining work is a future arrival, the scheduler
+        waits for it (``time.sleep`` on the wall clock, ``advance`` on a
+        :class:`ManualClock`).
+        """
+        eng = self.engine
+        while self.queue or any(r is not None for r in eng.active):
+            if not self.step() and self.queue:
+                nxt = min(r.arrival_s for r in self.queue)
+                self._wait(nxt - self.elapsed())
+        return self.finished
+
+    # -- internals --------------------------------------------------------
+
+    def _expire(self, now: float) -> None:
+        keep = []
+        for r in self.queue:
+            if (r.deadline_s is not None
+                    and now - r.arrival_s > r.deadline_s):
+                r.done = True
+                r.status = "expired"
+                self.expired += 1
+                self.finished.append(r)
+                self._finish_cb(r)
+                self._retire(r.rid)
+                self.log(f"request {r.rid} expired after "
+                         f"{now - r.arrival_s:.2f}s queued")
+            else:
+                keep.append(r)
+        self.queue = keep
+
+    def _admit_arrived(self, now: float) -> bool:
+        eng = self.engine
+        admitted = False
+        while True:
+            slot = eng._free_slot()
+            if slot is None:
+                break
+            idx = next(
+                (i for i, r in enumerate(self.queue) if r.arrival_s <= now),
+                None,
+            )
+            if idx is None:
+                break
+            req = self.queue.pop(idx)
+            logits = eng._prefill_slot(slot, req)
+            t = self.elapsed()
+            tok = self._select(req, logits)
+            req.output.append(tok)
+            req.status = "running"
+            req.ttft_s = t - req.arrival_s
+            self._ttfts.append(req.ttft_s)
+            self._rec[req.rid] = {
+                "arrival": req.arrival_s, "admit": t, "token_times": [t],
+            }
+            if self._span_start is None or t < self._span_start:
+                self._span_start = t
+            self._span_end = t
+            self._emit(req, tok)
+            admitted = True
+            self.log(f"admitted request {req.rid}; {len(self.queue)} queued")
+        return admitted
+
+    def _decode_round(self) -> None:
+        eng = self.engine
+        tokens = np.zeros(eng.slots, np.int32)
+        for i, r in enumerate(eng.active):
+            if r is not None:
+                tokens[i] = r.output[-1]
+        with runtime.use_backend(eng.kan_backend), runtime.use_mesh(eng.mesh):
+            logits, eng.cache = eng._decode(
+                eng.params, eng.cache, jnp.asarray(tokens),
+                jnp.asarray(eng.pos),
+            )
+        self.decode_steps += 1
+        # pure-greedy pools (the common case, and all of run()) take the
+        # device-side argmax — transferring B ints per step, not the whole
+        # (slots, vocab) logits matrix; the full rows come to host only
+        # when some active request actually samples
+        if any(getattr(r, "sampling", None) is not None
+               for r in eng.active if r is not None):
+            rows, nxt = np.asarray(logits), None
+        else:
+            rows, nxt = None, np.asarray(jnp.argmax(logits, axis=-1))
+        t = self.elapsed()
+        self._span_end = t
+        for i, r in enumerate(eng.active):
+            if r is None:
+                continue
+            eng.pos[i] += 1
+            tok = int(nxt[i]) if rows is None else self._select(r, rows[i])
+            r.output.append(tok)
+            # a slot admitted behind the scheduler's back (direct
+            # ServeEngine._admit) is adopted on its first decode: timing
+            # starts now, its prefill token predates the record
+            rec = self._rec.setdefault(
+                r.rid, {"arrival": r.arrival_s, "admit": t, "token_times": []}
+            )
+            rec["token_times"].append(t)
+            self._emit(r, tok)
+            if (tok == r.eos_id or len(r.output) >= r.max_new_tokens
+                    or eng.pos[i] >= eng.max_len - 1):
+                r.done = True
+                r.status = "done"
+                r.latency_s = t - rec["admit"]
+                self.completed += 1
+                self.finished.append(r)
+                eng.active[i] = None
+                self._finish_cb(r)
+                self._retire(r.rid)
+                self.log(f"request {r.rid} done ({len(r.output)} tokens, "
+                         f"{r.latency_s:.2f}s)")
+
+    def _retire(self, rid: int) -> None:
+        """Fold a finished request's record into the capped aggregates and
+        drop all per-request state (records live only while active)."""
+        rec = self._rec.pop(rid, None)
+        if rec is not None:
+            times = rec["token_times"]
+            self._tokens_done += len(times)
+            self._itls.extend(b - a for a, b in zip(times, times[1:]))
+        self._on_token.pop(rid, None)
+        self._on_done.pop(rid, None)
+
+    def _select(self, req, logits_row: np.ndarray) -> int:
+        sp = getattr(req, "sampling", None)
+        if sp is None:
+            return int(np.argmax(logits_row))
+        return sample_token(logits_row, sp, req.rid, len(req.output))
+
+    def _emit(self, req, tok: int) -> None:
+        cb = self._on_token.get(req.rid)
+        if cb is not None:
+            cb(req, tok)
+
+    def _finish_cb(self, req) -> None:
+        cb = self._on_done.get(req.rid)
+        if cb is not None:
+            cb(req)
+
+    # -- observability ----------------------------------------------------
+
+    def queue_depth_trace(self) -> list:
+        """(elapsed_s, queue_depth) samples, one per scheduling round
+        (capped tail: the most recent 4096 rounds)."""
+        return list(self._depth_samples)
+
+    def drain_finished(self) -> list:
+        """Return and clear the finished list — long-lived callers should
+        drain periodically so completed Request objects don't accumulate."""
+        out, self.finished = self.finished, []
+        return out
+
+    def stats(self) -> dict:
+        """Aggregate metrics snapshot (see docs/serving.md for the glossary).
+
+        TTFT is measured from *arrival* (not admission), so queueing delay
+        under load shows up where a caller would feel it; inter-token
+        latencies are the gaps between consecutive emitted tokens of one
+        request, pooled over all requests (finished aggregates plus the
+        currently active requests' partial streams).  ``tokens_per_s``
+        spans first admission to the last emitted token.  TTFT/ITL
+        percentiles are over the most recent 4096 samples.
+        """
+        active_recs = list(self._rec.values())
+        itls = list(self._itls) + [
+            b - a for rec in active_recs
+            for a, b in zip(rec["token_times"], rec["token_times"][1:])
+        ]
+        tokens = self._tokens_done + sum(
+            len(rec["token_times"]) for rec in active_recs
+        )
+        span = 0.0
+        if self._span_start is not None and self._span_end is not None:
+            span = self._span_end - self._span_start
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "expired": self.expired,
+            "rejected": self.rejected,
+            "queued": len(self.queue),
+            "active": sum(r is not None for r in self.engine.active),
+            "decode_steps": self.decode_steps,
+            "tokens": tokens,
+            "tokens_per_s": (tokens / span) if span > 0 else None,
+            "ttft_s": _summary(list(self._ttfts)),
+            "itl_s": _summary(itls),
+            "queue_depth": {
+                "samples": len(self._depth_samples),
+                "rounds": self._depth_rounds,
+                "max": self._depth_max,
+                "mean": (self._depth_sum / self._depth_rounds
+                         if self._depth_rounds else 0.0),
+            },
+            "elapsed_s": self.elapsed(),
+        }
