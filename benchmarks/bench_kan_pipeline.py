@@ -22,7 +22,11 @@ end-to-end served-tokens/s measurement of the continuous-batching engine on
 the fused datapath.  A SUSTAINED section then drives the async scheduler
 with a deterministic Poisson-ish arrival schedule of mixed-length prompts
 per runtime backend, recording TTFT p50/p95, inter-token latency, tokens/s
-and queue depth (the docs/serving.md metrics glossary).  A SHARDED section then times the mesh-sharded runtime
+and queue depth (the docs/serving.md metrics glossary).  An ATTENTION
+section times the decode step per attention backend ("ref" chunked XLA vs
+"flash" fused Pallas) on the KAN-deployed engine — with "flash" every
+FLOP-heavy op of the step is a fused kernel — plus a prefill-shape SDPA
+microbench.  A SHARDED section then times the mesh-sharded runtime
 (data-only and data x model meshes over every host device, plus a
 mesh-sharded engine leg), recording mesh shape and device count so the perf
 trajectory captures scaling — run under
@@ -224,6 +228,84 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
     }
 
 
+def _bench_attention(repeats: int, print_fn=print) -> dict:
+    """Per-step decode latency per ATTENTION backend — the "every FLOP-heavy
+    op fused" datapoint.
+
+    Times the engine's compiled decode step (all slots advance one token) on
+    the qwen2.5-14b smoke KAN-FFN config with ``kan_deploy=True``, once per
+    registered attention backend: with "flash" both the attention and the
+    KAN-FFN halves of every block execute as fused Pallas kernels
+    (``all_fused`` in the row), with "ref" attention stays on the chunked
+    XLA composition.  A full-sequence prefill-shape SDPA microbench (ref vs
+    flash on the same GQA geometry) rides along.  Off-TPU both kernels run
+    in interpret mode — these numbers validate plumbing, not TPU perf.
+    """
+    from repro.configs.registry import smoke_config
+    from repro.models import layers as L
+    from repro.models.model import init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    # prefill-shape microbench: full-sequence SDPA, per backend
+    b, s, d = 2, 128, cfg.head_dim
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (b, s, cfg.num_heads, d), jnp.float32)
+    k = jax.random.normal(key, (b, s, cfg.num_kv_heads, d), jnp.float32)
+    v = jax.random.normal(key, (b, s, cfg.num_kv_heads, d), jnp.float32)
+    prefill_rows = []
+    for backend in runtime.available_attn_backends():
+        fn = jax.jit(
+            lambda q, be=backend: L._sdpa(q, k, v, cfg, "global", backend=be)
+        )
+        mean_us, min_us = _time_fn(fn, q, repeats)
+        prefill_rows.append({
+            "attn_backend": backend, "batch": b, "seq": s,
+            "heads": cfg.num_heads, "kv_heads": cfg.num_kv_heads,
+            "sdpa_us": mean_us, "sdpa_min_us": min_us,
+        })
+        print_fn(f"attention,leg=prefill_sdpa,attn_backend={backend},"
+                 f"seq={s},us={mean_us:.0f}")
+
+    # decode-step latency: continuous-batching engine, fused KAN datapath
+    decode_rows = []
+    for backend in runtime.available_attn_backends():
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             kan_deploy=True, attn_backend=backend)
+        for rid in range(engine.slots):
+            engine._admit(Request(rid=rid, prompt=[5, 6, 7, 8],
+                                  max_new_tokens=4))
+        pos = jnp.asarray(engine.pos)
+
+        def step(tok, eng=engine, pos=pos):
+            with runtime.use_backend(eng.kan_backend):
+                logits, _ = eng._decode(eng.params, eng.cache, tok, pos)
+            return logits
+
+        token = jnp.zeros((engine.slots,), jnp.int32)
+        mean_us, min_us = _time_fn(step, token, repeats)
+        row = {
+            "attn_backend": engine.attn_backend,
+            "kan_backend": runtime.resolve_backend(engine.kan_backend),
+            "all_fused": engine.attn_backend == "flash",
+            "slots": engine.slots,
+            "decode_step_us": mean_us,
+            "decode_step_min_us": min_us,
+            "tokens_per_s": engine.slots / (min_us * 1e-6),
+        }
+        decode_rows.append(row)
+        print_fn(
+            f"attention,leg=decode_step,attn_backend={row['attn_backend']},"
+            f"kan_backend={row['kan_backend']},"
+            f"all_fused={int(row['all_fused'])},"
+            f"decode_step_us={mean_us:.0f},tok_s={row['tokens_per_s']:.0f}"
+        )
+    return {"arch": "qwen2.5-14b-kanffn", "prefill": prefill_rows,
+            "decode": decode_rows}
+
+
 def _bench_sharded(batch: int, repeats: int, serve_requests: int,
                    serve_max_new: int, print_fn=print) -> dict:
     """Mesh-sharded legs: the perf trajectory's scaling axis.
@@ -361,6 +443,7 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
     serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn)
     sustained = _bench_sustained(serve_requests + 2, serve_max_new,
                                  print_fn=print_fn)
+    attention = _bench_attention(repeats, print_fn=print_fn)
     sharded = _bench_sharded(batch, repeats, serve_requests, serve_max_new,
                              print_fn=print_fn)
     cache = runtime.cache_stats()  # after the serve legs: they share the cache
@@ -373,6 +456,7 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
         "rows": rows,
         "serve": serve,
         "sustained": sustained,
+        "attention": attention,
         "sharded": sharded,
         "plan_cache": cache,
     }

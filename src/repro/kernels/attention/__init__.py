@@ -1,0 +1,9 @@
+"""Fused flash-attention Pallas kernel (the "flash" runtime attention
+backend): online-softmax tiled-KV SDPA, GQA-aware, masks built from
+positions.  See :mod:`repro.kernels.attention.kernel` for the kernel and
+:mod:`repro.kernels.attention.ops` for the model-facing wrapper."""
+
+from .kernel import NEG_INF, flash_attention_fused
+from .ops import flash_attention
+
+__all__ = ["NEG_INF", "flash_attention", "flash_attention_fused"]

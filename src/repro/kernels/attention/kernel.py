@@ -1,0 +1,148 @@
+"""Flash-attention Pallas kernel: online softmax over tiled KV streaming.
+
+One fused kernel computes ``softmax(q k^T * scale + mask) v`` without ever
+materializing the (S, T) score matrix: the KV sequence is streamed in tiles
+along the innermost (sequential) grid dimension while VMEM scratch carries
+the per-query-row running maximum ``m``, running denominator ``l`` and the
+rescaled output accumulator — the FlashAttention recurrence (Dao et al.).
+
+Layout/grid conventions (the :mod:`.ops` wrapper produces these):
+
+  * q:    (B, Hkv, S, G, D) — the GQA query group G is folded next to the
+          query rows, so ONE KV head tile streamed from HBM serves its whole
+          group; in-kernel the q tile is reshaped to (block_q * G, D) rows.
+  * k, v: (B, Hkv, T, D)
+  * qpos/kpos: (B, S) / (B, T) int32 absolute positions.  Negative kpos
+          marks an invalid key (unwritten rolling-cache slot, padded tile) —
+          masked under EVERY kind; negative qpos rows finalize to exact 0.
+  * grid: (B, Hkv, S/block_q, T/block_k) with the KV tile index innermost —
+          scratch persists across the sequential KV sweep, is initialized at
+          the first tile and finalized (guarded division) at the last.
+
+Masks are built on the fly from the position vectors — no (S, T) tensor —
+matching the ``layers._sdpa_chunk`` semantics and its ``-1e30`` constant:
+
+  * "causal": kpos <= qpos
+  * "local":  causal AND kpos > qpos - window (sliding window)
+  * "full":   no positional mask (bidirectional / cross attention)
+
+The denominator is guarded at finalization: rows with no valid key emit
+exactly 0 instead of a uniform average over masked garbage (the decode
+padding bug this kernel's ref path also fixes).  All arithmetic is f32;
+the output is cast back to the query dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite mask constant shared with layers.py (no NaN risk)
+_STAT_LANES = 128  # running m/l scratch is lane-replicated for TPU tiling
+
+KINDS = ("causal", "local", "full")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, out_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  kind: str, window: int, softcap: float, scale: float):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    bq, g, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+    bk = k_ref.shape[2]
+    q = q_ref[0, 0].reshape(bq * g, d).astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    if softcap > 0.0:
+        # softcap BEFORE masking — same op order as layers._sdpa_chunk
+        s = jnp.tanh(s / softcap) * softcap
+
+    qp = qpos_ref[0]                     # (bq,) int32
+    kp = kpos_ref[0]                     # (bk,) int32
+    mask = (kp >= 0)[None, :]            # key validity, every kind
+    if kind in ("causal", "local"):
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if kind == "local" and window > 0:
+        mask = mask & (kp[None, :] > qp[:, None] - window)
+    # (bq, bk) -> (bq*G, bk): the positional mask is per-KV-head, shared by
+    # the whole query group
+    mask = jnp.broadcast_to(mask[:, None, :], (bq, g, bk)).reshape(bq * g, bk)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]                # (bq*G, 1)
+    l_prev = l_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # masked lanes would exp to 1 when the whole tile is masked
+    # (s == m_new == NEG_INF); the where keeps them at exactly 0
+    e = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)      # rescale factor for the old state
+    l_new = l_prev * alpha + jnp.sum(e, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        # guarded denominator: fully-masked rows (padded queries, qpos < 0)
+        # emit exact zeros instead of an average over garbage
+        out = jnp.where(l > 0.0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+        out_ref[0, 0] = out.reshape(bq, g, d).astype(out_ref.dtype)
+
+
+def flash_attention_fused(q, k, v, qpos, kpos, *, kind: str, window: int,
+                          softcap: float, scale: float, block_q: int,
+                          block_k: int, interpret: bool):
+    """The raw pallas_call on pre-tiled operands (see module docstring for
+    the layout contract).  S must divide by block_q and T by block_k —
+    :func:`repro.kernels.attention.ops.flash_attention` pads and slices."""
+    if kind not in KINDS:
+        raise ValueError(f"kind {kind!r} not in {KINDS}")
+    b, hkv, s, g, d = q.shape
+    t = k.shape[2]
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    grid = (b, hkv, s // block_q, t // block_k)
+    kern = functools.partial(
+        _flash_kernel, kind=kind, window=int(window),
+        softcap=float(softcap), scale=float(scale),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, g, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, block_q), lambda ib, ih, iq, ik: (ib, iq)),
+            pl.BlockSpec((1, block_k), lambda ib, ih, iq, ik: (ib, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, g, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, s, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, _STAT_LANES), jnp.float32),  # running m
+            pltpu.VMEM((block_q * g, _STAT_LANES), jnp.float32),  # running l
+            pltpu.VMEM((block_q * g, d), jnp.float32),            # output acc
+        ],
+        interpret=interpret,
+    )(q, k, v, qpos, kpos)

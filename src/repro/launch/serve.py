@@ -74,6 +74,13 @@ def main():
              "REPRO_KAN_BACKEND, then 'pallas'",
     )
     ap.add_argument(
+        "--attn-backend", default=None, choices=("ref", "flash"),
+        help="attention backend: 'flash' = fused Pallas flash-attention "
+             "kernel (online softmax, tiled KV; interpret mode off-TPU), "
+             "'ref' = chunked XLA composition; default resolves via "
+             "REPRO_ATTN_BACKEND, then flash on TPU / ref elsewhere",
+    )
+    ap.add_argument(
         "--tuned-config", default=None, metavar="PATH",
         help="repro.tune artifact to deploy: applies its chosen "
              "quantization point to the KAN-FFN config and registers its "
@@ -123,7 +130,10 @@ def main():
         mesh = parse_mesh_spec(args.mesh)
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
                          kan_deploy=args.kan_ffn, kan_backend=args.backend,
-                         mesh=mesh)
+                         attn_backend=args.attn_backend, mesh=mesh)
+    fused_note = (" (fully-fused decode: attention + KAN-FFN both Pallas)"
+                  if engine.attn_backend == "flash" and args.kan_ffn else "")
+    print(f"attention backend: {engine.attn_backend}{fused_note}")
     if mesh is not None:
         layout = engine.mesh_layout()
         print("mesh: " + " x ".join(

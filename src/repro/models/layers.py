@@ -178,6 +178,23 @@ _grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
 ATTN_CHUNK = 1024  # query-chunk size for the memory-bounded attention path
 
 
+def _masked_softmax(logits, mask):
+    """Softmax over the last axis with an explicit validity mask.
+
+    Matches ``jax.nn.softmax`` bit-for-bit whenever a row has at least one
+    valid key (the max valid logit contributes exp(0) = 1, so the
+    denominator is >= 1 and masked lanes underflow to exactly 0 either
+    way); fully-masked rows — e.g. qpos = -1 padding from the remainder
+    chunk — produce EXACT zeros instead of a uniform average over -1e30
+    garbage."""
+    if mask is None:
+        return jax.nn.softmax(logits, axis=-1)
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
 def _sdpa_chunk(qc, qpos, k, v, kpos, cfg: ModelConfig, kind: str):
     """One query chunk.  qc: (B,C,Hkv,G,D); qpos: (C,); k/v: (B,T,Hkv,D);
     kpos: (T,).  Masks are built on the fly from positions — no (S,T)
@@ -187,34 +204,60 @@ def _sdpa_chunk(qc, qpos, k, v, kpos, cfg: ModelConfig, kind: str):
         "bchgd,bthd->bhgct", qc.astype(jnp.float32), k.astype(jnp.float32)
     ) / math.sqrt(d)
     logits = softcap(logits, cfg.attn_logit_softcap)
+    m = None
     if kind in ("global", "local"):
         m = kpos[None, :] <= qpos[:, None]                    # causal (C,T)
         if kind == "local" and cfg.window_size > 0:
             m &= kpos[None, :] > qpos[:, None] - cfg.window_size
-        logits = jnp.where(m[None, None, None], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
+        m = m[None, None, None]
+    probs = _masked_softmax(logits, m)
     return jnp.einsum("bhgct,bthd->bchgd", probs.astype(v.dtype), v)
 
 
-def _sdpa(q, k, v, cfg: ModelConfig, kind: str, qpos=None, kpos=None):
-    """q: (B,S,Hq,D), k/v: (B,T,Hkv,D).  kind: global|local|bidir|cross.
-    Long sequences are processed in query chunks under lax.scan."""
+# layers.py attention kinds -> kernels.attention mask kinds
+_FLASH_KIND = {"global": "causal", "local": "local",
+               "bidir": "full", "cross": "full"}
+
+
+def _sdpa_flash(q, k, v, cfg: ModelConfig, kind: str, qpos, kpos):
+    """The fused Pallas flash-attention path (backend "flash")."""
+    from ..kernels.attention import flash_attention
+
+    out = flash_attention(
+        q, k, v, kind=_FLASH_KIND[kind], qpos=qpos, kpos=kpos,
+        window=cfg.window_size, softcap=cfg.attn_logit_softcap,
+    )
+    return out.astype(v.dtype)
+
+
+def _sdpa_ref(q, k, v, cfg: ModelConfig, kind: str, qpos=None, kpos=None):
+    """The chunked XLA composition (backend "ref" — the parity oracle).
+
+    Long sequences are processed in ATTN_CHUNK query chunks under lax.scan;
+    a non-multiple remainder is PADDED to a full chunk (padded rows carry
+    qpos = -1, are fully masked, and provably contribute zeros) instead of
+    abandoning the memory-bounded path for the whole sequence."""
     b, s, hq, d = q.shape
     t = k.shape[1]
     hkv = k.shape[2]
     g = hq // hkv
-    qr = q.reshape(b, s, hkv, g, d)
     if qpos is None:
         qpos = jnp.arange(s) + (t - s)
     if kpos is None:
         kpos = jnp.arange(t)
 
-    if s <= ATTN_CHUNK or s % ATTN_CHUNK != 0:
-        out = _sdpa_chunk(qr, qpos, k, v, kpos, cfg, kind)
+    if s <= ATTN_CHUNK:
+        out = _sdpa_chunk(q.reshape(b, s, hkv, g, d), qpos, k, v, kpos,
+                          cfg, kind)
         return out.reshape(b, s, hq, d)
 
-    nc = s // ATTN_CHUNK
-    qcs = qr.reshape(b, nc, ATTN_CHUNK, hkv, g, d).swapaxes(0, 1)
+    pad = (-s) % ATTN_CHUNK
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pad), constant_values=-1)
+    sp = s + pad
+    nc = sp // ATTN_CHUNK
+    qcs = q.reshape(b, nc, ATTN_CHUNK, hkv, g, d).swapaxes(0, 1)
     qps = qpos.reshape(nc, ATTN_CHUNK)
 
     def body(_, inp):
@@ -222,8 +265,24 @@ def _sdpa(q, k, v, cfg: ModelConfig, kind: str, qpos=None, kpos=None):
         return None, _sdpa_chunk(qc, qp, k, v, kpos, cfg, kind)
 
     _, outs = jax.lax.scan(body, None, (qcs, qps))
-    out = outs.swapaxes(0, 1).reshape(b, s, hkv, g, d)
-    return out.reshape(b, s, hq, d)
+    out = outs.swapaxes(0, 1).reshape(b, sp, hq, d)
+    return out[:, :s]
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, kind: str, qpos=None, kpos=None,
+          backend=None):
+    """q: (B,S,Hq,D), k/v: (B,T,Hkv,D).  kind: global|local|bidir|cross.
+
+    Dispatches to the resolved runtime attention backend: "ref" (chunked
+    XLA composition) or "flash" (fused Pallas online-softmax kernel) — see
+    :mod:`repro.runtime.attention`.  Resolution happens at trace time, so
+    jitted callers that want to switch backends must key their compiled
+    steps on the resolved name (``ServeEngine`` does)."""
+    from ..runtime.attention import resolve_attn_backend
+
+    if resolve_attn_backend(backend) == "flash":
+        return _sdpa_flash(q, k, v, cfg, kind, qpos, kpos)
+    return _sdpa_ref(q, k, v, cfg, kind, qpos, kpos)
 
 
 def attention(p, x, cfg: ModelConfig, kind: str, positions=None, enc_out=None):
@@ -251,11 +310,37 @@ def _sdpa_batch_masked(q, k, v, mask, cfg: ModelConfig):
     logits = jnp.einsum("bshgd,bthd->bhgst", qr, k.astype(jnp.float32))
     logits = logits / math.sqrt(d)
     logits = softcap(logits, cfg.attn_logit_softcap)
-    if mask is not None:
-        logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
+    probs = _masked_softmax(
+        logits, None if mask is None else mask[:, None, None, None, :]
+    )
     out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
     return out.reshape(b, s, hq, d)
+
+
+def _sdpa_decode(q, k, v, cfg: ModelConfig, kind: str, qpos, kpos,
+                 backend=None):
+    """Decode-step attention built from per-batch positions.
+
+    q: (B,1,Hq,D); k/v: (B,T,Hkv,D); qpos: (B,1) current position; kpos:
+    (B,T) absolute position held by each cache slot, -1 for unwritten
+    slots.  ``qpos``/``kpos`` None means bidirectional over the whole cache
+    (cross-attention decode).  Dispatches like :func:`_sdpa`: the "ref"
+    backend materializes the (B,T) mask, "flash" hands the positions to the
+    fused kernel.  Both mask non-causal AND unwritten (kpos < 0) slots;
+    for the rolling-window cache causal + validity is the complete window
+    predicate, because the buffer only ever holds the last ``window``
+    positions."""
+    from ..runtime.attention import resolve_attn_backend
+
+    if resolve_attn_backend(backend) == "flash":
+        # "global" maps to the kernel's causal mask; the local rolling cache
+        # needs no window predicate (see above), so it is causal too
+        fkind = "bidir" if kind in ("bidir", "cross") else "global"
+        return _sdpa_flash(q, k, v, cfg, fkind, qpos, kpos)
+    mask = None
+    if kind not in ("bidir", "cross"):
+        mask = (kpos >= 0) & (kpos <= qpos)
+    return _sdpa_batch_masked(q, k, v, mask, cfg)
 
 
 def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None):
@@ -265,7 +350,7 @@ def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None
     if kind == "cross":
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
         k, v = cache["k"], cache["v"]  # precomputed from enc_out
-        out = _sdpa_batch_masked(q, k, v, None, cfg)
+        out = _sdpa_decode(q, k, v, cfg, "cross", None, None)
         return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
 
     positions = pos[:, None]
@@ -277,13 +362,12 @@ def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None
         ck = _scatter_time(cache["k"], k, slot)
         cv = _scatter_time(cache["v"], v, slot)
         kpos = _window_positions(pos, t, t)  # absolute pos held by each slot
-        mask = (kpos >= 0) & (kpos <= pos[:, None])
     else:
         ck = _scatter_time(cache["k"], k, pos[:, None])
         cv = _scatter_time(cache["v"], v, pos[:, None])
-        kpos = jnp.arange(ck.shape[1])[None, :]
-        mask = kpos <= pos[:, None]
-    out = _sdpa_batch_masked(q, ck, cv, mask, cfg)
+        kpos = jnp.broadcast_to(jnp.arange(ck.shape[1])[None, :],
+                                (b, ck.shape[1]))
+    out = _sdpa_decode(q, ck, cv, cfg, kind, pos[:, None], kpos)
     new_cache = {"k": ck, "v": cv}
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 

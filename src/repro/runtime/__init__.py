@@ -3,7 +3,10 @@
 The single dispatch point for every quantized-KAN execution surface.  See
 :mod:`repro.runtime.executor` (the ``ref`` / ``pallas`` / ``acim`` backends,
 ``REPRO_KAN_BACKEND`` resolution) and :mod:`repro.runtime.plancache` (batch
-bucketing + the LRU of compiled applies).
+bucketing + the LRU of compiled applies).  :mod:`repro.runtime.attention`
+carries the same registry pattern for the attention half of a block: the
+"ref" / "flash" SDPA backends, resolved as explicit arg >
+``use_attn_backend`` scope > ``REPRO_ATTN_BACKEND`` > hardware default.
 
     from repro import runtime
     y = runtime.execute(dep, x)                      # resolved backend
@@ -11,6 +14,14 @@ bucketing + the LRU of compiled applies).
                         key=jax.random.PRNGKey(0))
 """
 
+from .attention import (
+    ENV_ATTN_BACKEND_VAR,
+    available_attn_backends,
+    default_attn_backend,
+    register_attn_backend,
+    resolve_attn_backend,
+    use_attn_backend,
+)
 from .executor import (
     ACIMExecutor,
     ENV_BACKEND_VAR,
@@ -36,26 +47,32 @@ from .plancache import PLAN_CACHE, PlanCache, PlanKey, bucket_batch
 
 __all__ = [
     "ACIMExecutor",
+    "ENV_ATTN_BACKEND_VAR",
     "ENV_BACKEND_VAR",
     "PLAN_CACHE",
     "PallasExecutor",
     "PlanCache",
     "PlanKey",
     "RefExecutor",
+    "available_attn_backends",
     "available_backends",
     "bucket_batch",
     "cache_stats",
+    "default_attn_backend",
     "default_interpret",
     "execute",
     "get_executor",
     "mesh_axis_sizes",
     "quiet_cim_config",
     "ref_composition",
+    "register_attn_backend",
     "register_executor",
     "reset_cache",
+    "resolve_attn_backend",
     "resolve_backend",
     "resolve_mesh",
     "shard_notes",
+    "use_attn_backend",
     "use_backend",
     "use_mesh",
 ]

@@ -1,0 +1,113 @@
+"""Attention-backend registry: the dispatch point for SDPA execution.
+
+Mirrors the KAN executor registry (:mod:`repro.runtime.executor`) for the
+other FLOP-heavy op of a block: scaled-dot-product attention.  Unlike the
+KAN registry, entries here are NAMES, not callables — the implementations
+live in :mod:`repro.models.layers` (``_sdpa`` dispatches on the resolved
+name), keeping this module dependency-free so the models package can import
+it at module level.
+
+Registered backends:
+
+  * ``"ref"``   — the chunked XLA composition (``layers._sdpa_ref``):
+                  position-built masks, query chunking under ``lax.scan``,
+                  guarded masked softmax.  The parity oracle.
+  * ``"flash"`` — the fused Pallas flash-attention kernel
+                  (:mod:`repro.kernels.attention`): online softmax with a
+                  running max/denominator over tiled KV streaming, GQA-aware
+                  (one KV head tile serves its whole query group).  Runs in
+                  interpret mode off-TPU.
+
+Selection precedence matches the KAN registry: explicit argument >
+:func:`use_attn_backend` scope > ``REPRO_ATTN_BACKEND`` env var > the
+hardware default (:func:`default_attn_backend`: "flash" on TPU, "ref"
+elsewhere — the automatic off-TPU fallback; "flash" can still be forced
+off-TPU, where the kernel executes via ``default_interpret()``).
+
+Resolution happens at TRACE time: anything that jits a step around
+``_sdpa`` must either re-trace when the backend changes or carry the
+resolved name in its jit key (``ServeEngine`` passes it as a static
+argument to its compiled prefill/decode closures).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+
+from .executor import default_interpret
+
+__all__ = [
+    "ENV_ATTN_BACKEND_VAR",
+    "available_attn_backends",
+    "default_attn_backend",
+    "register_attn_backend",
+    "resolve_attn_backend",
+    "use_attn_backend",
+]
+
+ENV_ATTN_BACKEND_VAR = "REPRO_ATTN_BACKEND"
+
+_ATTN_BACKENDS: list = []
+# innermost use_attn_backend() override; a ContextVar so concurrent engines
+# on different threads/async tasks cannot clobber each other's scope
+_SCOPE_ATTN: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_attn_backend_scope", default=None
+)
+
+
+def register_attn_backend(name: str) -> None:
+    if name not in _ATTN_BACKENDS:
+        _ATTN_BACKENDS.append(name)
+
+
+def available_attn_backends() -> tuple:
+    return tuple(sorted(_ATTN_BACKENDS))
+
+
+def default_attn_backend() -> str:
+    """"flash" on TPU; the XLA ref path everywhere else (the Pallas kernel
+    would only run in interpret mode there — correct but slow)."""
+    return "ref" if default_interpret() else "flash"
+
+
+def resolve_attn_backend(backend: str | None = None, *,
+                         default: str | None = None) -> str:
+    """Resolve an attention backend name; ValueError for unknown names."""
+    if backend is None or backend == "auto":
+        backend = _SCOPE_ATTN.get()
+    if backend is None:
+        backend = os.environ.get(ENV_ATTN_BACKEND_VAR, "").strip() or None
+    if backend is None:
+        backend = default_attn_backend() if default is None else default
+    if backend not in _ATTN_BACKENDS:
+        raise ValueError(
+            f"unknown attention backend {backend!r}; "
+            f"registered: {available_attn_backends()}"
+        )
+    return backend
+
+
+@contextlib.contextmanager
+def use_attn_backend(backend: str | None):
+    """Scoped override (beats the env var, loses to explicit arguments).
+
+    ``None`` is a no-op passthrough so callers can plumb an optional choice.
+    """
+    if backend is not None and backend not in _ATTN_BACKENDS:
+        raise ValueError(
+            f"unknown attention backend {backend!r}; "
+            f"registered: {available_attn_backends()}"
+        )
+    token = _SCOPE_ATTN.set(
+        backend if backend is not None else _SCOPE_ATTN.get()
+    )
+    try:
+        yield
+    finally:
+        _SCOPE_ATTN.reset(token)
+
+
+register_attn_backend("ref")
+register_attn_backend("flash")

@@ -29,6 +29,16 @@ When ``kan_deploy=True`` every KAN-FFN block executes through the
 "pallas"), sharing the runtime's plan/compile cache across prefill and
 decode.
 
+Attention routes through the runtime attention registry the same way:
+``attn_backend`` ("ref" = chunked XLA, "flash" = fused Pallas
+flash-attention) resolves at engine build (explicit arg >
+``REPRO_ATTN_BACKEND`` > flash-on-TPU/ref-elsewhere) and rides the
+compiled prefill/decode closures as a static jit argument — the backend is
+part of the compile key, so two engines with different attention backends
+never share a stale trace.  With ``kan_deploy=True`` and
+``attn_backend="flash"`` every FLOP-heavy op of the decode step (attention
+AND both KAN-FFN halves) executes as a fused Pallas kernel.
+
 With ``mesh=`` the engine serves distributed: params are placed by the
 role-based sharding rules, the slot pool / KV cache shard their slot dim
 on "data" (decode advances all slots data-parallel), and every prefill /
@@ -43,6 +53,7 @@ decode_32k serve_step that the dry-run lowers at production shapes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -92,6 +103,7 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  kan_deploy: bool = False, kan_backend: str | None = None,
+                 attn_backend: str | None = None,
                  prefill_buckets: bool | None = None, mesh=None):
         if kan_deploy:
             # Execute every KAN-FFN block on the paper's quantized datapath:
@@ -126,6 +138,12 @@ class ServeEngine:
         self.max_len = max_len
         self.greedy = greedy
         self.kan_backend = kan_backend if kan_deploy else None
+        # Attention backend ("ref" XLA / "flash" fused Pallas): resolved and
+        # validated EAGERLY — a typo fails at engine build, and the resolved
+        # name is baked into the compiled prefill/decode closures as a
+        # static jit argument, so switching backends retraces instead of
+        # silently reusing the other backend's step (plan-cache keying).
+        self.attn_backend = runtime.resolve_attn_backend(attn_backend)
         if prefill_buckets is None:
             prefill_buckets = prefill_bucketing_supported(cfg)
         self.prefill_buckets = prefill_buckets and prefill_bucketing_supported(cfg)
@@ -153,20 +171,24 @@ class ServeEngine:
         cfg_ = cfg
         eng = self
 
-        @jax.jit
-        def _decode(params, cache, token, pos):
+        @functools.partial(jax.jit, static_argnames=("attn_backend",))
+        def _decode(params, cache, token, pos, attn_backend):
             eng.decode_traces += 1  # python body runs only while tracing
-            return M.decode_step(params, cache, token, pos, cfg_)
+            with runtime.use_attn_backend(attn_backend):
+                return M.decode_step(params, cache, token, pos, cfg_)
 
-        self._decode = _decode
+        self._decode = functools.partial(_decode,
+                                         attn_backend=self.attn_backend)
 
-        @jax.jit
-        def _prefill_one(params, tokens, last_index):
+        @functools.partial(jax.jit, static_argnames=("attn_backend",))
+        def _prefill_one(params, tokens, last_index, attn_backend):
             eng.prefill_traces += 1
-            return M.prefill(params, {"tokens": tokens}, cfg_,
-                             max_len=max_len, last_index=last_index)
+            with runtime.use_attn_backend(attn_backend):
+                return M.prefill(params, {"tokens": tokens}, cfg_,
+                                 max_len=max_len, last_index=last_index)
 
-        self._prefill_one = _prefill_one
+        self._prefill_one = functools.partial(
+            _prefill_one, attn_backend=self.attn_backend)
 
     # -- slot management ------------------------------------------------
 
@@ -260,6 +282,7 @@ class ServeEngine:
             "decode_traces": self.decode_traces,
             "plan_cache": runtime.cache_stats(),
             "mesh": self.mesh_layout(),
+            "attn_backend": self.attn_backend,
         }
 
     def mesh_layout(self) -> dict | None:

@@ -1,0 +1,281 @@
+"""Attention-backend parity suite: the fused Pallas flash-attention kernel
+("flash") vs the chunked XLA composition ("ref") across mask kinds, GQA
+ratios, odd sequence lengths, and the serving decode paths — plus
+regressions for the two chunked-attention bugfixes (non-multiple-of-chunk
+sequences abandoning the memory-bounded path; fully-masked query rows
+softmaxing into garbage instead of zeros).
+
+The documented ref tolerance: both backends compute logits/softmax in f32
+but associate the reductions differently (online softmax vs one-shot), so
+outputs agree to ~1e-5 absolute on unit-scale inputs, not bitwise.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime
+from repro.configs.registry import smoke_config
+from repro.kernels.attention import flash_attention
+from repro.models import layers as L
+
+TOL = dict(rtol=2e-5, atol=2e-5)  # the documented flash-vs-ref tolerance
+
+
+def _qkv_rand(b, s, hq, hkv, d, t=None, seed=0):
+    t = s if t is None else t
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("kind", ["global", "local", "bidir"])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (4, 1)])
+def test_flash_matches_ref_kinds_and_gqa(kind, hq, hkv):
+    cfg = smoke_config("qwen2.5-14b")
+    if kind == "local":
+        cfg = dataclasses.replace(cfg, window_size=7)
+    q, k, v = _qkv_rand(2, 33, hq, hkv, 16, seed=hash((kind, hq)) % 1000)
+    ref = L._sdpa_ref(q, k, v, cfg, kind)
+    with runtime.use_attn_backend("flash"):
+        out = L._sdpa(q, k, v, cfg, kind)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_flash_matches_ref_softcap_and_cross_lengths():
+    """Softcap applies before masking in both backends; cross attention has
+    S != T and no positional mask."""
+    cfg = dataclasses.replace(smoke_config("gemma2-27b"), window_size=0)
+    assert cfg.attn_logit_softcap and cfg.attn_logit_softcap > 0.0
+    q, k, v = _qkv_rand(2, 9, 4, 2, 16, t=24, seed=3)
+    ref = L._sdpa_ref(q, k, v, cfg, "cross")
+    with runtime.use_attn_backend("flash"):
+        out = L._sdpa(q, k, v, cfg, "cross")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+    # and causal with softcap, S < T (right-aligned default qpos)
+    ref = L._sdpa_ref(q, k, v, cfg, "global")
+    with runtime.use_attn_backend("flash"):
+        out = L._sdpa(q, k, v, cfg, "global")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("s", [63, 65])
+def test_chunked_remainder_stays_memory_bounded(s, monkeypatch):
+    """Bugfix regression: s % ATTN_CHUNK != 0 must still take the chunked
+    scan (padded final chunk), never fall back to one full-(S,T) call, and
+    must equal the single-chunk oracle.  Run at chunk=64 so the suite stays
+    fast; 63/65 are the small-geometry counterparts of 1023/1025."""
+    chunk = 64
+    seen = []
+    orig_chunk_fn = L._sdpa_chunk
+
+    def spy(qc, qpos, k, v, kpos, cfg, kind):
+        seen.append(qc.shape[1])
+        return orig_chunk_fn(qc, qpos, k, v, kpos, cfg, kind)
+
+    cfg = smoke_config("qwen2.5-14b")
+    q, k, v = _qkv_rand(1, s, 4, 2, 16, seed=s)
+    monkeypatch.setattr(L, "ATTN_CHUNK", chunk)
+    monkeypatch.setattr(L, "_sdpa_chunk", spy)
+    out = L._sdpa_ref(q, k, v, cfg, "global")
+    # every chunk the scan processed was memory-bounded
+    assert seen and all(c <= chunk for c in seen), seen
+    monkeypatch.setattr(L, "ATTN_CHUNK", 10**9)
+    direct = L._sdpa_ref(q, k, v, cfg, "global")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_chunked_remainder_true_shape_1025(monkeypatch):
+    """The literal failing shape from the issue: s=1025 with the real
+    ATTN_CHUNK=1024 takes the padded scan and matches the direct path."""
+    cfg = smoke_config("qwen2.5-14b")
+    q, k, v = _qkv_rand(1, 1025, 2, 1, 8, seed=7)
+    out = L._sdpa_ref(q, k, v, cfg, "global")
+    monkeypatch.setattr(L, "ATTN_CHUNK", 10**9)
+    direct = L._sdpa_ref(q, k, v, cfg, "global")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_softmax_fully_masked_rows_are_zero():
+    """Bugfix regression: under the -1e30 mask constant a fully-masked row
+    used to softmax into a uniform average of garbage; the guarded
+    denominator must produce exact zeros (both backends, no NaNs)."""
+    cfg = smoke_config("qwen2.5-14b")
+    b, s, hq, hkv, d = 1, 8, 4, 2, 16
+    q, k, v = _qkv_rand(b, s, hq, hkv, d, seed=11)
+    qpos = jnp.concatenate(
+        [jnp.arange(s - 3, dtype=jnp.int32), jnp.full((3,), -1, jnp.int32)]
+    )
+    ref = L._sdpa_ref(q, k, v, cfg, "global", qpos=qpos)
+    with runtime.use_attn_backend("flash"):
+        out = L._sdpa(q, k, v, cfg, "global", qpos=qpos)
+    for o in (ref, out):
+        assert bool(jnp.isfinite(o).all())
+        assert float(jnp.abs(o[:, -3:]).max()) == 0.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+    # decode-path variant: a batch row whose key mask is all-False
+    qd = q[:, :1]
+    mask = jnp.zeros((b, s), bool)
+    od = L._sdpa_batch_masked(qd, k, v, mask, cfg)
+    assert bool(jnp.isfinite(od).all()) and float(jnp.abs(od).max()) == 0.0
+
+
+@pytest.mark.parametrize("kind", ["global", "local"])
+def test_decode_parity_including_rolling_window_edge(kind):
+    """Step-by-step decode parity, ref vs flash, driving the rolling-window
+    cache across the pos == window boundary (slot reuse starts there)."""
+    if kind == "local":
+        cfg = dataclasses.replace(smoke_config("mixtral-8x7b"), window_size=8)
+        steps = 13  # crosses pos == 7 (window-1), 8 (window), 9, ...
+    else:
+        cfg = smoke_config("qwen2.5-14b")
+        steps = 5
+    b = 2
+    p = L.init_attention(jax.random.PRNGKey(3), cfg)
+    cache_r = L.init_kv_cache(cfg, b, 32, kind)
+    cache_f = L.init_kv_cache(cfg, b, 32, kind)
+    key = jax.random.PRNGKey(0)
+    for i in range(steps):
+        x = jax.random.normal(
+            jax.random.fold_in(key, i), (b, 1, cfg.d_model), jnp.float32
+        ) * 0.3
+        pos = jnp.full((b,), i, jnp.int32)
+        o_r, cache_r = L.attention_decode(p, x, cache_r, pos, cfg, kind)
+        with runtime.use_attn_backend("flash"):
+            o_f, cache_f = L.attention_decode(p, x, cache_f, pos, cfg, kind)
+        np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_r),
+                                   err_msg=f"pos={i}", **TOL)
+
+
+def test_decode_cross_attention_parity():
+    cfg = smoke_config("qwen2.5-14b")
+    b = 2
+    p = L.init_attention(jax.random.PRNGKey(5), cfg, cross=True)
+    key = jax.random.PRNGKey(6)
+    enc = jax.random.normal(key, (b, 12, cfg.d_model), jnp.float32) * 0.3
+    cache = {
+        "k": jnp.einsum("bsd,dhk->bshk", enc, p["wk"]),
+        "v": jnp.einsum("bsd,dhk->bshk", enc, p["wv"]),
+    }
+    x = jax.random.normal(key, (b, 1, cfg.d_model), jnp.float32) * 0.3
+    pos = jnp.zeros((b,), jnp.int32)
+    o_r, _ = L.attention_decode(p, x, cache, pos, cfg, "cross")
+    with runtime.use_attn_backend("flash"):
+        o_f, _ = L.attention_decode(p, x, cache, pos, cfg, "cross")
+    np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_r), **TOL)
+
+
+def test_attn_backend_resolution_precedence(monkeypatch):
+    """explicit arg > use_attn_backend scope > REPRO_ATTN_BACKEND env >
+    hardware default; unknown names raise."""
+    monkeypatch.delenv(runtime.ENV_ATTN_BACKEND_VAR, raising=False)
+    assert runtime.resolve_attn_backend() == runtime.default_attn_backend()
+    monkeypatch.setenv(runtime.ENV_ATTN_BACKEND_VAR, "flash")
+    assert runtime.resolve_attn_backend() == "flash"
+    with runtime.use_attn_backend("ref"):
+        assert runtime.resolve_attn_backend() == "ref"          # scope > env
+        assert runtime.resolve_attn_backend("flash") == "flash"  # arg > scope
+        with runtime.use_attn_backend(None):                     # passthrough
+            assert runtime.resolve_attn_backend() == "ref"
+    assert runtime.resolve_attn_backend() == "flash"
+    with pytest.raises(ValueError):
+        runtime.resolve_attn_backend("sdpa-magic")
+    with pytest.raises(ValueError):
+        with runtime.use_attn_backend("sdpa-magic"):
+            pass
+    assert set(runtime.available_attn_backends()) >= {"ref", "flash"}
+
+
+def test_serve_engine_flash_attention_same_tokens():
+    """End-to-end serving regression: the continuous-batching engine decodes
+    the SAME greedy tokens with flash attention as with the XLA ref (the
+    flash-vs-ref numerical gap is far below the argmax margin), and the
+    backend is baked into the compiled steps (attn_backend in stats)."""
+    from repro.serve.engine import Request, ServeEngine
+    from repro.models.model import init_params
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(42)
+        reqs = []
+        for rid in range(3):
+            rng, k = jax.random.split(rng)
+            prompt = jax.random.randint(k, (6,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=4))
+        return reqs
+
+    outs = {}
+    for backend in ("ref", "flash"):
+        eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                          attn_backend=backend)
+        assert eng.compile_stats()["attn_backend"] == backend
+        outs[backend] = {r.rid: r.output for r in eng.run(make_reqs())}
+    assert outs["ref"] == outs["flash"]
+
+
+def test_serve_engine_rejects_unknown_attn_backend():
+    from repro.serve.engine import ServeEngine
+    from repro.models.model import init_params
+
+    cfg = smoke_config("qwen2.5-14b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, slots=2, max_len=32,
+                    attn_backend="sdpa-magic")
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+def test_flash_attention_composes_with_mesh_sharding():
+    """Flash attention under the PR-4 sharded engine (slots/KV on "data",
+    KAN-FFN channels on "model") serves the same tokens as the unsharded
+    flash engine — attention composes with mesh sharding."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve.engine import Request, ServeEngine
+    from repro.models.model import init_params
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def make_reqs():
+        rng = jax.random.PRNGKey(21)
+        reqs = []
+        for rid in range(3):
+            rng, k = jax.random.split(rng)
+            prompt = jax.random.randint(k, (6,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+        return reqs
+
+    runtime.reset_cache()
+    e0 = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                     attn_backend="flash")
+    out0 = {r.rid: r.output for r in e0.run(make_reqs())}
+
+    n = len(jax.devices())
+    mesh = make_local_mesh(2, 2) if n >= 4 else make_local_mesh(2, 1)
+    e1 = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                     attn_backend="flash", mesh=mesh)
+    out1 = {r.rid: r.output for r in e1.run(make_reqs())}
+    assert out0 == out1
+
+
+def test_flash_attention_kernel_rejects_bad_args():
+    q, k, v = _qkv_rand(1, 8, 4, 2, 16, seed=0)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, kind="sideways")
+    q3 = jnp.zeros((1, 8, 3, 16))  # Hq=3 not a multiple of Hkv=2
+    with pytest.raises(ValueError):
+        flash_attention(q3, k, v, kind="causal")
