@@ -20,9 +20,12 @@ also reports executor throughput (rows through the KAN per second) and the
 run ends with the runtime plan-cache hit/miss/trace counters plus a small
 end-to-end served-tokens/s measurement of the continuous-batching engine on
 the fused datapath.  A SUSTAINED section then drives the async scheduler
-with a deterministic Poisson-ish arrival schedule of mixed-length prompts
-per runtime backend, recording TTFT p50/p95, inter-token latency, tokens/s
-and queue depth (the docs/serving.md metrics glossary).  An ATTENTION
+with a deterministic Poisson-ish arrival schedule of a mixed
+shared-prefix/unique workload per runtime backend on the paged-KV engine
+(block pool + prefix cache + chunked prefill), plus contiguous-slab and
+prefix-cache-off comparison legs, recording TTFT p50/p95, inter-token
+latency, tokens/s, queue-depth trace and the KV pool's hit-rate /
+peak-blocks counters (the docs/serving.md metrics glossary).  An ATTENTION
 section times the decode step per attention backend ("ref" chunked XLA vs
 "flash" fused Pallas) on the KAN-deployed engine — with "flash" every
 FLOP-heavy op of the step is a fused kernel — plus a prefill-shape SDPA
@@ -140,14 +143,25 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
 
     A deterministic Poisson-ish arrival schedule (exponential inter-arrival
     gaps from a fixed-seed generator — identical offsets every run and for
-    every backend) of mixed-length prompts is submitted to the scheduler
-    with future ``arrival_s`` offsets, so prompts prefill into free slots
+    every engine) drives a MIXED workload: even-rid requests share a
+    32-token prefix (the "common system prompt" — 4 full KV blocks at the
+    paged legs' 8-token block size) with a short unique tail, odd-rid
+    requests are unique mixed-length prompts.  Requests are submitted with
+    future ``arrival_s`` offsets, so prompts prefill into free slots
     *between* decode steps of earlier requests exactly as under live
-    traffic.  Each runtime backend (``ref`` / ``pallas`` / ``acim``) serves
-    the same schedule on a fresh engine after a one-request warmup (so TTFT
-    measures scheduling + prefill, not jit compilation), and the JSON
-    records the docs/serving.md metrics: TTFT p50/p95, inter-token latency,
-    tokens/s, queue depth over time.
+    traffic.
+
+    Each runtime backend (``ref`` / ``pallas`` / ``acim``) serves the
+    schedule on a PAGED engine (block pool + prefix cache + chunked
+    prefill) after a warmup that compiles every trace the schedule hits, so
+    TTFT measures scheduling + prefill, not jit compilation.  Two extra
+    legs on the fused backend — the contiguous slab and the paged pool with
+    the prefix cache off — isolate what the pool and the cache each buy:
+    the shared-prefix half of the workload prefills once under
+    ``paged_cache`` and every time under the other two.  Every row records
+    the docs/serving.md metrics (TTFT p50/p95, inter-token latency,
+    tokens/s, queue-depth trace) plus the KV pool counters (prefix hit
+    rate, peak blocks in use, evictions) where applicable.
     """
     import random as _random
 
@@ -164,41 +178,56 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         offsets.append(t)
         t += gen.expovariate(1.0 / mean_interarrival_s)
 
-    def make_reqs():
+    BS = 8                 # paged legs: KV block size (flash KV tile)
+    KV_BLOCKS = 48         # pool head-room for cached prefixes + both slots
+    SHARED = [9] * (4 * BS)  # the shared system prompt: 4 FULL blocks
+
+    def make_prompts():
         rng = jax.random.PRNGKey(1)
-        reqs = []
+        prompts = []
         for rid in range(requests):
             rng, k = jax.random.split(rng)
-            plen = 4 + rid % 7  # mixed lengths exercise the prefill buckets
-            prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
-            reqs.append(Request(rid=rid, prompt=prompt,
-                                max_new_tokens=max_new,
-                                arrival_s=offsets[rid]))
-        return reqs
+            if rid % 2 == 0:  # shared-prefix half: common prompt + 4-tok tail
+                prompts.append(
+                    SHARED
+                    + jax.random.randint(k, (4,), 3, cfg.vocab_size).tolist())
+            else:             # unique half, mixed lengths (prefill buckets)
+                plen = 4 + rid % 7
+                prompts.append(
+                    jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist())
+        return prompts
 
-    rows = []
-    for backend in ("ref", "pallas", "acim"):
-        engine = ServeEngine(params, cfg, slots=2, max_len=64,
-                             kan_deploy=True, kan_backend=backend)
-        # compile outside the timed window: decode + one prefill variant per
-        # length bucket the schedule will hit (lengths 4..10 -> buckets
-        # {8, 16}), so TTFT measures scheduling + prefill, not jit traces
-        buckets = {len(engine._padded_prompt([3] * (4 + r % 7)))
-                   for r in range(requests)}
+    prompts = make_prompts()
+
+    def serve_one(engine, label):
+        # compile outside the timed window.  Contiguous engines need one
+        # prefill trace per length bucket the schedule hits; paged engines
+        # chunk every prompt into `prefill_chunk`-token pieces (one bucket),
+        # so a single full-chunk + partial-chunk warm prompt covers them.
+        if engine.paged:
+            warm_lens = {BS + 1, 2}
+        else:
+            warm_lens = {len(engine._padded_prompt([3] * len(p)))
+                         for p in prompts}
         warm = [Request(rid=-1 - i, prompt=[5] * ln, max_new_tokens=2)
-                for i, ln in enumerate(sorted(buckets))]
+                for i, ln in enumerate(sorted(warm_lens))]
         engine.run(warm)
+        if engine.paged:
+            engine.pool.reset_stats()  # warm prompts are not workload hits
         # build the request list BEFORE the scheduler: its construction
-        # starts the arrival_s timebase, and prompt generation must not eat
-        # into the schedule (submit bumps past offsets to "now")
-        reqs = make_reqs()
+        # starts the arrival_s timebase, and request construction must not
+        # eat into the schedule (submit bumps past offsets to "now")
+        reqs = [Request(rid=rid, prompt=p, max_new_tokens=max_new,
+                        arrival_s=offsets[rid])
+                for rid, p in enumerate(prompts)]
         sched = Scheduler(engine)
         for r in reqs:
             sched.submit(r)
         sched.run_until_idle()
         s = sched.stats()
+        kv = s["kv"]
         row = {
-            "backend": backend,
+            **label,
             "requests": requests,
             "completed": s["completed"],
             "tokens": s["tokens"],
@@ -209,22 +238,79 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
             "itl_p95_s": s["itl_s"]["p95"],
             "queue_depth_max": s["queue_depth"]["max"],
             "queue_depth_mean": s["queue_depth"]["mean"],
+            "queue_depth_trace": [[round(ts, 4), d]
+                                  for ts, d in sched.queue_depth_trace()],
+            "prefix_hit_rate": None if kv is None else kv["prefix_hit_rate"],
+            "prefix_hits": None if kv is None else kv["prefix_hits"],
+            "prefix_misses": None if kv is None else kv["prefix_misses"],
+            "kv_blocks_in_use_peak": (None if kv is None
+                                      else kv["blocks_in_use_peak"]),
+            "kv_blocks_cached": None if kv is None else kv["blocks_cached"],
+            "kv_evictions": None if kv is None else kv["evictions"],
         }
-        rows.append(row)
         print_fn(
-            f"sustained,backend={backend},tokens={row['tokens']},"
-            f"tokens_per_s={row['tokens_per_s']:.1f},"
+            f"sustained,backend={row['backend']},kv={row['kv']},"
+            f"tokens={row['tokens']},tokens_per_s={row['tokens_per_s']:.1f},"
             f"ttft_p50_ms={row['ttft_p50_s'] * 1e3:.1f},"
             f"ttft_p95_ms={row['ttft_p95_s'] * 1e3:.1f},"
             f"qdepth_max={row['queue_depth_max']}"
+            + ("" if kv is None else
+               f",hit_rate={row['prefix_hit_rate']:.2f},"
+               f"kv_peak={row['kv_blocks_in_use_peak']}")
         )
+        return row
+
+    paged_kw = dict(kv_block_size=BS, kv_blocks=KV_BLOCKS, prefill_chunk=BS)
+    rows = []
+    for backend in ("ref", "pallas", "acim"):
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             kan_deploy=True, kan_backend=backend,
+                             prefix_cache=True, **paged_kw)
+        rows.append(serve_one(engine, {"backend": backend,
+                                       "kv": "paged_cache"}))
+    # what did the pool / the prefix cache each buy? — same schedule on the
+    # fused backend with (a) the contiguous slab, (b) the pool, cache off
+    for kv_mode, kw in (("contiguous", {}),
+                        ("paged_nocache", dict(prefix_cache=False,
+                                               **paged_kw))):
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             kan_deploy=True, kan_backend="pallas", **kw)
+        rows.append(serve_one(engine, {"backend": "pallas", "kv": kv_mode}))
+
+    def _pallas(kv_mode):
+        return next(r for r in rows
+                    if r["backend"] == "pallas" and r["kv"] == kv_mode)
+
+    summary = {  # the cache-on-vs-off headline (acceptance: on <= off p95)
+        "ttft_p95_contiguous_s": _pallas("contiguous")["ttft_p95_s"],
+        "ttft_p95_paged_nocache_s": _pallas("paged_nocache")["ttft_p95_s"],
+        "ttft_p95_paged_cache_s": _pallas("paged_cache")["ttft_p95_s"],
+        "prefix_hit_rate": _pallas("paged_cache")["prefix_hit_rate"],
+    }
+    print_fn(
+        f"sustained,kv_summary,"
+        f"ttft_p95_contiguous_ms={summary['ttft_p95_contiguous_s'] * 1e3:.1f},"
+        f"ttft_p95_nocache_ms={summary['ttft_p95_paged_nocache_s'] * 1e3:.1f},"
+        f"ttft_p95_cache_ms={summary['ttft_p95_paged_cache_s'] * 1e3:.1f},"
+        f"hit_rate={summary['prefix_hit_rate']:.2f}"
+    )
     return {
         "arch": "qwen2.5-14b-kanffn",
         "slots": 2,
         "arrival_seed": arrival_seed,
         "mean_interarrival_s": mean_interarrival_s,
         "arrival_offsets_s": offsets,
+        "workload": {
+            "requests": requests,
+            "shared_prefix_tokens": len(SHARED),
+            "shared_prefix_share": 0.5,
+            "unique_plen_range": [4, 10],
+        },
+        "kv_block_size": BS,
+        "kv_blocks": KV_BLOCKS,
+        "prefill_chunk": BS,
         "rows": rows,
+        "kv_summary": summary,
     }
 
 
@@ -361,8 +447,9 @@ def _bench_sharded(batch: int, repeats: int, serve_requests: int,
 
 
 def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
-        serve_max_new: int = 8, tuned: bool = False,
-        tile_candidates: int = 10, print_fn=print) -> dict:
+        serve_max_new: int = 8, sustained_requests: int = 60,
+        tuned: bool = False, tile_candidates: int = 10,
+        print_fn=print) -> dict:
     interpret = default_interpret()
     runtime.reset_cache()
     rows = []
@@ -441,7 +528,7 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
                     f"tile_tuned={int(row['tile_tuned'])}")
         print_fn(msg)
     serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn)
-    sustained = _bench_sustained(serve_requests + 2, serve_max_new,
+    sustained = _bench_sustained(sustained_requests, serve_max_new,
                                  print_fn=print_fn)
     attention = _bench_attention(repeats, print_fn=print_fn)
     sharded = _bench_sharded(batch, repeats, serve_requests, serve_max_new,
@@ -475,7 +562,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         result = run(batch=32, repeats=2, serve_requests=2, serve_max_new=4,
-                     tuned=args.tuned, tile_candidates=6)
+                     sustained_requests=6, tuned=args.tuned,
+                     tile_candidates=6)
     else:
         result = run(batch=args.batch, repeats=args.repeats,
                      tuned=args.tuned)

@@ -21,6 +21,7 @@ __all__ = [
     "opt_state_pspecs",
     "batch_pspec",
     "cache_pspecs",
+    "paged_cache_pspecs",
     "deployed_kan_pspecs",
     "to_shardings",
 ]
@@ -136,6 +137,27 @@ def cache_pspecs(cache, mesh, batch: int):
         if dsize > 1 and batch % dsize == 0:
             for i, d in enumerate(shape):
                 if d == batch:
+                    parts[i] = "data"
+                    break
+        return P(*parts)
+
+    return jax.tree.map(one, cache)
+
+
+def paged_cache_pspecs(cache, mesh, num_blocks: int):
+    """Paged KV pool specs: shard the pool (num_blocks) dim on "data" when
+    it divides — the paged analogue of ``cache_pspecs``'s slot-dim rule.
+    Leaves are (repeats, NB, block_size, H, D); the NB dim is matched by
+    size, counting from index 1 so a repeats count equal to NB can't
+    shadow it."""
+    dsize = _axis_size(mesh, "data")
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        parts = [None] * len(shape)
+        if dsize > 1 and num_blocks % dsize == 0:
+            for i, d in enumerate(shape):
+                if i >= 1 and d == num_blocks:
                     parts[i] = "data"
                     break
         return P(*parts)

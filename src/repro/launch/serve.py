@@ -19,6 +19,10 @@
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.serve --arch qwen2.5-14b --kan-ffn \
         --mesh data=4,model=2
+    # paged KV pool with prefix caching and chunked prefill (vLLM-style;
+    # greedy streams stay bit-identical to the contiguous slab):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --kv-block-size 16 --prefix-cache on --prefill-chunk 32
 """
 
 from __future__ import annotations
@@ -93,6 +97,28 @@ def main():
              "KV cache shard on data, KAN-FFN output channels on model; "
              "takes precedence over any ambient runtime.use_mesh scope",
     )
+    ap.add_argument(
+        "--kv-block-size", type=int, default=None, metavar="TOKENS",
+        help="paged KV cache: cut KV storage into blocks of this many "
+             "tokens (a multiple of 8 — the flash kernel's KV tile; must "
+             "divide max_len) with a free-list allocator, per-request block "
+             "tables and a hash-keyed prefix cache; default keeps the "
+             "contiguous per-slot slab.  Greedy streams are bit-identical "
+             "either way",
+    )
+    ap.add_argument(
+        "--prefix-cache", default="on", choices=("on", "off"),
+        help="with --kv-block-size: share full prompt-prefix blocks across "
+             "requests (shared system prompts prefill once); 'off' keeps "
+             "the block pool a plain allocator",
+    )
+    ap.add_argument(
+        "--prefill-chunk", type=int, default=None, metavar="TOKENS",
+        help="with --kv-block-size: prefill long prompts this many tokens "
+             "per scheduling round, interleaved with pooled decode, so one "
+             "long prompt can't stall TTFT for the pool; default prefills "
+             "whole prompts at admission",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
@@ -128,9 +154,20 @@ def main():
         from .mesh import parse_mesh_spec
 
         mesh = parse_mesh_spec(args.mesh)
+    if args.prefill_chunk is not None and args.kv_block_size is None:
+        raise SystemExit("--prefill-chunk requires --kv-block-size")
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
                          kan_deploy=args.kan_ffn, kan_backend=args.backend,
-                         attn_backend=args.attn_backend, mesh=mesh)
+                         attn_backend=args.attn_backend, mesh=mesh,
+                         kv_block_size=args.kv_block_size,
+                         prefix_cache=args.prefix_cache == "on",
+                         prefill_chunk=args.prefill_chunk)
+    if engine.paged:
+        kv = engine.kv_stats()
+        print(f"paged kv: {kv['num_blocks']} blocks x {kv['block_size']} "
+              f"tokens, prefix cache "
+              f"{'on' if kv['prefix_cache'] else 'off'}, prefill chunk "
+              f"{kv['prefill_chunk'] or 'whole-prompt'}")
     fused_note = (" (fully-fused decode: attention + KAN-FFN both Pallas)"
                   if engine.attn_backend == "flash" and args.kan_ffn else "")
     print(f"attention backend: {engine.attn_backend}{fused_note}")
@@ -203,6 +240,13 @@ def main():
     print(f"  queue depth max={s['queue_depth']['max']} "
           f"mean={s['queue_depth']['mean']:.2f} "
           f"over {s['queue_depth']['samples']} samples")
+    if s["kv"] is not None:
+        kv = s["kv"]
+        print(f"  kv pool: hit rate={kv['prefix_hit_rate']:.2f} "
+              f"({kv['prefix_hits']}/{kv['prefix_hits'] + kv['prefix_misses']}"
+              f" blocks), in use={kv['blocks_in_use']} "
+              f"cached={kv['blocks_cached']} free={kv['blocks_free']} "
+              f"evictions={kv['evictions']}")
     if mesh is not None:
         from .. import runtime
 

@@ -343,9 +343,22 @@ def _sdpa_decode(q, k, v, cfg: ModelConfig, kind: str, qpos, kpos,
     return _sdpa_batch_masked(q, k, v, mask, cfg)
 
 
-def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None):
+def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None,
+                     block_table=None):
     """One-token decode.  x: (B, 1, D); cache: {"k","v"}: (B, T, Hkv, D);
-    pos: (B,) int32 current position.  Returns (out, new_cache)."""
+    pos: (B,) int32 current position.  Returns (out, new_cache).
+
+    With ``block_table`` ((B, nblk) int32) the cache is the PAGED pool —
+    {"k","v"}: (NB, block_size, Hkv, D), no batch dim — and the table maps
+    each request's logical block j to pool block id ``block_table[b, j]``.
+    The step scatters the new K/V into the owning pool block and gathers
+    the table into a (B, nblk*block_size, Hkv, D) view, which is exactly
+    the contiguous cache's shape and, at every VALID position, its values —
+    stale lanes (unwritten tail blocks point at the scratch block) are
+    masked by the same ``kpos <= qpos`` predicate and contribute exact
+    zeros (see ``_masked_softmax``), so paged decode is bit-identical to
+    contiguous decode.  Only "global" attention pages (the engine gates on
+    pure-global decoders)."""
     b = x.shape[0]
     if kind == "cross":
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -355,6 +368,24 @@ def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None
 
     positions = pos[:, None]
     q, k, v = _qkv(p, x, cfg, True, positions)
+    if block_table is not None:
+        bs = cache["k"].shape[1]
+        nblk = block_table.shape[1]
+        bidx = jnp.arange(b)
+        blk = block_table[bidx, pos // bs]            # (B,) pool block ids
+        off = pos % bs
+        # retired slots all map to the scratch block; duplicate (blk, off)
+        # targets race there, which is harmless — scratch lanes are never
+        # unmasked for any live request
+        ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+        gk = ck[block_table].reshape(b, nblk * bs, *ck.shape[2:])
+        gv = cv[block_table].reshape(b, nblk * bs, *cv.shape[2:])
+        kpos = jnp.broadcast_to(jnp.arange(nblk * bs)[None, :],
+                                (b, nblk * bs))
+        out = _sdpa_decode(q, gk, gv, cfg, kind, pos[:, None], kpos)
+        return (jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+                {"k": ck, "v": cv})
     t = cache["k"].shape[1]
     if kind == "local" and 0 < cfg.window_size <= t:
         # rolling window cache: slot = pos % window (t == window)
@@ -395,6 +426,44 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str):
         "k": jnp.zeros(shape, _dtype(cfg)),
         "v": jnp.zeros(shape, _dtype(cfg)),
     }
+
+
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """One layer's paged KV pool: (NB, block_size, Hkv, D), no batch dim —
+    requests own pool blocks through their block tables (serve.kvpool)."""
+    shape = (num_blocks, block_size, cfg.phys_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, _dtype(cfg)),
+        "v": jnp.zeros(shape, _dtype(cfg)),
+    }
+
+
+def paged_prefill_update(kv, k, v, block_table, start, real_end):
+    """Scatter a B=1 prefill chunk's K/V into the paged pool and gather the
+    request's full contiguous view back.
+
+    kv: {"k","v"}: (NB, bs, Hkv, D); k/v: (1, C, Hkv, D) chunk projections;
+    block_table: (nblk,) int32 pool ids for the request's logical blocks
+    (unallocated tail entries = scratch); start / real_end: scalar absolute
+    positions — chunk row j holds position ``start + j`` and rows at
+    positions >= real_end are bucket padding, whose writes are DROPPED
+    (their block index is forced out of range with ``mode="drop"``) so pad
+    garbage can never land in a block another request shares.
+
+    Returns (new_kv, gathered_k, gathered_v) with gathered shapes
+    (1, nblk*bs, Hkv, D)."""
+    nb, bs = kv["k"].shape[:2]
+    nblk = block_table.shape[0]
+    c = k.shape[1]
+    p = start + jnp.arange(c)
+    pb = jnp.clip(p // bs, 0, nblk - 1)
+    blk = jnp.where(p < real_end, block_table[pb], nb)  # nb => dropped
+    off = p % bs
+    ck = kv["k"].at[blk, off].set(k[0].astype(kv["k"].dtype), mode="drop")
+    cv = kv["v"].at[blk, off].set(v[0].astype(kv["v"].dtype), mode="drop")
+    gk = ck[block_table].reshape(1, nblk * bs, *ck.shape[2:])
+    gv = cv[block_table].reshape(1, nblk * bs, *cv.shape[2:])
+    return {"k": ck, "v": cv}, gk, gv
 
 
 # ----------------------------------------------------------------------------

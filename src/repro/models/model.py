@@ -27,9 +27,11 @@ from . import layers as L
 from .transformer import (
     init_stack,
     init_stack_cache,
+    init_stack_cache_paged,
     stack_decode,
     stack_forward,
     stack_prefill,
+    stack_prefill_paged,
 )
 
 Params = Any
@@ -182,9 +184,46 @@ def prefill(p, batch, cfg: ModelConfig, max_len: int, last_index=None):
     return _lm_logits(p, sel, cfg)[:, 0], cache
 
 
-def decode_step(p, cache, token, pos, cfg: ModelConfig):
-    """token: (B,) int32; pos: (B,) int32.  Returns (logits (B,V), cache)."""
+def decode_step(p, cache, token, pos, cfg: ModelConfig, block_table=None):
+    """token: (B,) int32; pos: (B,) int32.  Returns (logits (B,V), cache).
+
+    ``block_table`` ((B, nblk) int32) switches the attention layers to the
+    paged KV pool (cache leaves (repeats, NB, bs, H, D)); omitted, the
+    contiguous per-slot cache is used unchanged."""
     h = _embed_tokens(p, token[:, None], cfg)
-    h, cache = stack_decode(p["decoder"], cache, h, pos, cfg)
+    h, cache = stack_decode(p["decoder"], cache, h, pos, cfg,
+                            block_table=block_table)
     h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
     return _lm_logits(p, h, cfg)[:, 0], cache
+
+
+def init_paged_cache(p, cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Paged KV pool shared by every slot (see serve.kvpool); pure
+    global-attention decoders only."""
+    if cfg.encoder_layers > 0:
+        raise ValueError("paged KV cache does not support encoder prefixes")
+    return init_stack_cache_paged(cfg, p["decoder"], num_blocks, block_size)
+
+
+def prefill_chunk(p, tokens, cache, block_table, start, real_end, cfg:
+                  ModelConfig, last_index):
+    """Advance one B=1 prefill chunk against the paged KV pool.
+
+    tokens: (1, C) int32 — prompt slice [start, start+C), right-padded with
+    token 0 to a length bucket; positions >= ``real_end`` are padding (their
+    KV writes are dropped).  ``block_table``: (nblk,) pool ids for the
+    request; ``last_index``: absolute index of the LAST real prompt token —
+    the returned (1, V) logits row is read there (meaningful only on the
+    final chunk; earlier chunks return a garbage row the caller ignores,
+    keeping one trace for all chunks).  Returns (logits, cache)."""
+    b, s = tokens.shape
+    h = _embed_tokens(p, tokens, cfg)
+    positions = start + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, cache = stack_prefill_paged(p["decoder"], cache, h, cfg, block_table,
+                                   start, real_end, positions=positions)
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    idx = jnp.clip(last_index - start, 0, s - 1).astype(jnp.int32)
+    sel = jnp.take_along_axis(
+        h, jnp.broadcast_to(idx, (b,))[:, None, None], axis=1
+    )
+    return _lm_logits(p, sel, cfg)[:, 0], cache

@@ -172,7 +172,34 @@ def init_stack_cache(cfg: ModelConfig, groups, batch: int, max_len: int,
     return caches
 
 
-def _block_decode(bp, cache, x, pos, cfg: ModelConfig, kinds):
+def init_stack_cache_paged(cfg: ModelConfig, groups, num_blocks: int,
+                           block_size: int):
+    """Paged-pool cache pytree: each l{i}_kv leaf is (repeats, NB, bs, H, D).
+
+    Requests address the shared pool through per-slot block tables
+    (:mod:`repro.serve.kvpool`); only pure global-attention decoders page
+    (rolling-window / recurrent / cross state has no block structure)."""
+    caches = []
+    del groups  # structure comes from cfg
+    for kinds, repeats in layer_groups(cfg):
+        one = {}
+        for i, kind in enumerate(kinds):
+            if kind != "global":
+                raise ValueError(
+                    f"paged KV cache requires a pure global-attention "
+                    f"decoder; layer kind {kind!r} is not pageable"
+                )
+            one[f"l{i}_kv"] = L.init_paged_kv_cache(cfg, num_blocks,
+                                                    block_size)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (repeats,) + a.shape).copy(), one
+        )
+        caches.append(stacked)
+    return caches
+
+
+def _block_decode(bp, cache, x, pos, cfg: ModelConfig, kinds,
+                  block_table=None):
     new_cache = dict(cache)
     for i, kind in enumerate(kinds):
         h = L.rmsnorm(bp[f"l{i}_ln1"], x, cfg.norm_eps)
@@ -180,6 +207,7 @@ def _block_decode(bp, cache, x, pos, cfg: ModelConfig, kinds):
             h, new_cache[f"l{i}_kv"] = L.attention_decode(
                 bp[f"l{i}_attn"], h, cache[f"l{i}_kv"], pos, cfg,
                 "local" if kind == "local" else "global",
+                block_table=block_table,
             )
         elif kind == "rglru":
             h, new_cache[f"l{i}_rnn"] = L.rglru(
@@ -210,10 +238,11 @@ def _block_decode(bp, cache, x, pos, cfg: ModelConfig, kinds):
     return x, new_cache
 
 
-def stack_decode(groups, caches, x, pos, cfg: ModelConfig):
+def stack_decode(groups, caches, x, pos, cfg: ModelConfig, block_table=None):
     new_caches = []
     for gp, cache, (kinds, repeats) in zip(groups, caches, layer_groups(cfg)):
-        body = functools.partial(_block_decode, cfg=cfg, kinds=kinds)
+        body = functools.partial(_block_decode, cfg=cfg, kinds=kinds,
+                                 block_table=block_table)
         if cfg.scan_layers and repeats > 1:
             def scan_body(carry, inp):
                 bp, c = inp
@@ -291,6 +320,75 @@ def _block_prefill(bp, cache, x, cfg: ModelConfig, kinds, positions, enc_out):
                 h = L.rmsnorm(bp[f"l{i}_pn2"], h, cfg.norm_eps)
             x = x + h
     return x, new_cache
+
+
+def _block_prefill_paged(bp, cache, x, cfg: ModelConfig, kinds, positions,
+                         block_table, start, real_end):
+    """One block over a B=1 PREFILL CHUNK against the paged KV pool.
+
+    x: (1, C, D) chunk activations at absolute positions
+    ``start + arange(C)``; chunk K/V scatter into the request's pool blocks
+    (pad rows >= real_end are dropped) and attention runs against the FULL
+    gathered view, so chunk queries see the cached prefix + earlier chunks
+    + themselves under the ordinary causal mask — stale tail lanes mask to
+    exact zeros.  Only "global" layers are pageable (init_stack_cache_paged
+    enforces it)."""
+    new_cache = dict(cache)
+    x = L.constrain_act(x)
+    for i, kind in enumerate(kinds):
+        h = L.rmsnorm(bp[f"l{i}_ln1"], x, cfg.norm_eps)
+        q, k, v = L._qkv(bp[f"l{i}_attn"], h, cfg, True, positions)
+        new_cache[f"l{i}_kv"], gk, gv = L.paged_prefill_update(
+            cache[f"l{i}_kv"], k, v, block_table, start, real_end
+        )
+        t = gk.shape[1]
+        h = L._sdpa(q, gk, gv, cfg, "global",
+                    qpos=positions[0], kpos=jnp.arange(t))
+        h = jnp.einsum("bshk,hkd->bsd", h, bp[f"l{i}_attn"]["wo"])
+        if cfg.post_norms:
+            h = L.rmsnorm(bp[f"l{i}_pn1"], h, cfg.norm_eps)
+        x = L.constrain_act(x + h)
+        if f"l{i}_ffn" in bp or f"l{i}_moe" in bp:
+            h = L.rmsnorm(bp[f"l{i}_ln2"], x, cfg.norm_eps)
+            if f"l{i}_moe" in bp:
+                h = L.moe(bp[f"l{i}_moe"], h, cfg)
+            else:
+                h = L.ffn(bp[f"l{i}_ffn"], h, cfg)
+            if cfg.post_norms:
+                h = L.rmsnorm(bp[f"l{i}_pn2"], h, cfg.norm_eps)
+            x = L.constrain_act(x + h)
+    return x, new_cache
+
+
+def stack_prefill_paged(groups, caches, x, cfg: ModelConfig, block_table,
+                        start, real_end, positions):
+    """Chunked prefill over the paged pool; mirrors :func:`stack_prefill`
+    (scan over stacked repeats) with the paged block body."""
+    new_caches = []
+    for gp, cache, (kinds, repeats) in zip(groups, caches, layer_groups(cfg)):
+        body = functools.partial(
+            _block_prefill_paged, cfg=cfg, kinds=kinds, positions=positions,
+            block_table=block_table, start=start, real_end=real_end,
+        )
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers and repeats > 1:
+            def scan_body(carry, inp):
+                bp, c = inp
+                y, nc = body(bp, c, carry)
+                return y, nc
+
+            x, nc = jax.lax.scan(scan_body, x, (gp, cache))
+            new_caches.append(nc)
+        else:
+            ncs = []
+            for r in range(repeats):
+                bp = jax.tree.map(lambda a: a[r], gp)
+                c = jax.tree.map(lambda a: a[r], cache)
+                x, nc = body(bp, c, x)
+                ncs.append(nc)
+            new_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ncs))
+    return x, new_caches
 
 
 def stack_prefill(groups, caches, x, cfg: ModelConfig, positions=None,

@@ -39,12 +39,27 @@ never share a stale trace.  With ``kan_deploy=True`` and
 ``attn_backend="flash"`` every FLOP-heavy op of the decode step (attention
 AND both KAN-FFN halves) executes as a fused Pallas kernel.
 
+With ``kv_block_size=`` the per-slot contiguous KV slab is replaced by a
+PAGED pool: KV storage is cut into fixed-size blocks (a multiple of the
+flash kernel's 8-row KV tile) handed out by a free-list allocator
+(:mod:`repro.serve.kvpool`), each slot addresses its tokens through a
+block table, and a hash-keyed prefix cache lets requests sharing a prompt
+prefix splice the cached blocks in copy-free instead of re-prefilling.
+``prefill_chunk=`` additionally stages long prompts: the scheduler
+advances one chunk per round, interleaved with pooled decode, so one long
+prompt can't stall TTFT for the pool.  Greedy token streams are
+bit-identical to the contiguous path: the paged decode step gathers the
+block table into exactly the contiguous cache's (B, max_len, ...) view,
+and masked softmax lanes contribute exact zeros regardless of stale block
+contents (see ``layers.attention_decode``).
+
 With ``mesh=`` the engine serves distributed: params are placed by the
 role-based sharding rules, the slot pool / KV cache shard their slot dim
-on "data" (decode advances all slots data-parallel), and every prefill /
-decode step runs under ``runtime.use_mesh``, so the KAN-FFN blocks execute
-on the mesh-sharded fused pipeline (batch on "data", output channels on
-"model").  A single-device mesh serves the same tokens as no mesh at all.
+on "data" — the paged pool shards its num_blocks dim there instead — and
+every prefill / decode step runs under ``runtime.use_mesh``, so the
+KAN-FFN blocks execute on the mesh-sharded fused pipeline (batch on
+"data", output channels on "model").  A single-device mesh serves the
+same tokens as no mesh at all.
 
 On CPU/smoke configs this is a functional demo; the same engine drives the
 decode_32k serve_step that the dry-run lowers at production shapes.
@@ -52,6 +67,7 @@ decode_32k serve_step that the dry-run lowers at production shapes.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import functools
 from typing import Any, Callable
@@ -63,8 +79,10 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as M
 from .. import runtime
+from .kvpool import KVBlockPool
 
-__all__ = ["Request", "ServeEngine", "prefill_bucketing_supported"]
+__all__ = ["Request", "ServeEngine", "prefill_bucketing_supported",
+           "paged_kv_supported"]
 
 
 def prefill_bucketing_supported(cfg: ModelConfig) -> bool:
@@ -77,6 +95,13 @@ def prefill_bucketing_supported(cfg: ModelConfig) -> bool:
         and cfg.family not in ("audio", "vlm")
         and all(k == "global" for k in cfg.layer_kinds)
     )
+
+
+def paged_kv_supported(cfg: ModelConfig) -> bool:
+    """Paged KV needs every layer's decode state to be a block-structured
+    KV cache — the same pure global-attention decoder predicate as prefill
+    bucketing (rolling-window / recurrent / encoder state has no pages)."""
+    return prefill_bucketing_supported(cfg)
 
 
 @dataclasses.dataclass
@@ -104,7 +129,10 @@ class ServeEngine:
                  max_len: int = 256, greedy: bool = True,
                  kan_deploy: bool = False, kan_backend: str | None = None,
                  attn_backend: str | None = None,
-                 prefill_buckets: bool | None = None, mesh=None):
+                 prefill_buckets: bool | None = None, mesh=None,
+                 kv_block_size: int | None = None,
+                 kv_blocks: int | None = None, prefix_cache: bool = True,
+                 prefill_chunk: int | None = None):
         if kan_deploy:
             # Execute every KAN-FFN block on the paper's quantized datapath:
             # int8 c' + SH-LUT through the repro.runtime executor registry
@@ -147,14 +175,61 @@ class ServeEngine:
         if prefill_buckets is None:
             prefill_buckets = prefill_bucketing_supported(cfg)
         self.prefill_buckets = prefill_buckets and prefill_bucketing_supported(cfg)
-        self.cache = M.init_cache(params, cfg, slots, max_len)
+
+        # -- paged KV pool (kv_block_size set) vs contiguous per-slot slab --
+        self.paged = kv_block_size is not None
+        self.kv_block_size = kv_block_size
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None and not self.paged:
+            raise ValueError("prefill_chunk requires the paged KV cache "
+                             "(set kv_block_size)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.pool = None
+        if self.paged:
+            if not paged_kv_supported(cfg):
+                raise ValueError(
+                    "kv_block_size requires a pure global-attention decoder "
+                    "(rolling-window / recurrent / encoder state has no pages)"
+                )
+            if kv_block_size < 1 or kv_block_size % 8:
+                # the flash kernel tiles KV in multiples of 8 rows; a block
+                # must never straddle a KV tile
+                raise ValueError(f"kv_block_size must be a positive multiple "
+                                 f"of 8, got {kv_block_size}")
+            if max_len % kv_block_size:
+                raise ValueError(f"max_len={max_len} not a multiple of "
+                                 f"kv_block_size={kv_block_size}")
+            nblk = max_len // kv_block_size
+            num_blocks = (kv_blocks if kv_blocks is not None
+                          else slots * nblk + 1)  # +1: the scratch block
+            if mesh is not None:
+                # round the pool dim up so it shards evenly on "data"
+                dsize = dict(zip(mesh.axis_names, mesh.devices.shape)
+                             ).get("data", 1)
+                num_blocks += (-num_blocks) % max(dsize, 1)
+            self.pool = KVBlockPool(num_blocks, kv_block_size,
+                                    prefix_cache=prefix_cache)
+            # table row entry 0 = the scratch block (unallocated / retired)
+            self.block_tables = np.zeros((slots, nblk), np.int32)
+            self._slot_blocks: list[list[int]] = [[] for _ in range(slots)]
+            self.cache = M.init_paged_cache(params, cfg, num_blocks,
+                                            kv_block_size)
+        else:
+            self.cache = M.init_cache(params, cfg, slots, max_len)
         self._slots_sharded = False
         if mesh is not None:
             from jax.sharding import PartitionSpec
 
-            cspecs = cache_pspecs(self.cache, mesh, slots)
-            # report what cache_pspecs actually decided (the CLI banner
-            # echoes this) instead of re-deriving its divisibility rule
+            if self.paged:
+                from ..dist.sharding import paged_cache_pspecs
+
+                cspecs = paged_cache_pspecs(self.cache, mesh,
+                                            self.pool.num_blocks)
+            else:
+                cspecs = cache_pspecs(self.cache, mesh, slots)
+            # report what the pspec rules actually decided (the CLI banner
+            # echoes this) instead of re-deriving their divisibility rule
             self._slots_sharded = any(
                 "data" in tuple(s) for s in jax.tree.leaves(
                     cspecs, is_leaf=lambda x: isinstance(x, PartitionSpec)
@@ -165,38 +240,86 @@ class ServeEngine:
             )
         self.pos = np.zeros(slots, np.int32)
         self.active: list[Request | None] = [None] * slots
+        # explicit free-slot list (sorted; lowest slot first, matching the
+        # old linear scan's order) — O(log slots) take/release instead of an
+        # O(slots) scan per admission.  A slot is NOT free while it is
+        # mid-prefill (chunked prefill holds it across rounds).
+        self._free_slots: list[int] = list(range(slots))
+        self._prefilling: dict[int, dict] = {}  # slot -> chunked-prefill state
         self.prefill_traces = 0
         self.decode_traces = 0
 
         cfg_ = cfg
         eng = self
 
-        @functools.partial(jax.jit, static_argnames=("attn_backend",))
-        def _decode(params, cache, token, pos, attn_backend):
-            eng.decode_traces += 1  # python body runs only while tracing
-            with runtime.use_attn_backend(attn_backend):
-                return M.decode_step(params, cache, token, pos, cfg_)
+        if self.paged:
+            @functools.partial(jax.jit, static_argnames=("attn_backend",))
+            def _decode_paged(params, cache, token, pos, tables, attn_backend):
+                eng.decode_traces += 1  # python body runs only while tracing
+                with runtime.use_attn_backend(attn_backend):
+                    return M.decode_step(params, cache, token, pos, cfg_,
+                                         block_table=tables)
 
-        self._decode = functools.partial(_decode,
-                                         attn_backend=self.attn_backend)
+            self._decode = functools.partial(
+                _decode_paged, attn_backend=self.attn_backend)
 
-        @functools.partial(jax.jit, static_argnames=("attn_backend",))
-        def _prefill_one(params, tokens, last_index, attn_backend):
-            eng.prefill_traces += 1
-            with runtime.use_attn_backend(attn_backend):
-                return M.prefill(params, {"tokens": tokens}, cfg_,
-                                 max_len=max_len, last_index=last_index)
+            @functools.partial(jax.jit, static_argnames=("attn_backend",))
+            def _prefill_chunk_fn(params, cache, tokens, table, start,
+                                  real_end, last_index, attn_backend):
+                eng.prefill_traces += 1
+                with runtime.use_attn_backend(attn_backend):
+                    return M.prefill_chunk(params, tokens, cache, table,
+                                           start, real_end, cfg_, last_index)
 
-        self._prefill_one = functools.partial(
-            _prefill_one, attn_backend=self.attn_backend)
+            self._prefill_chunk_fn = functools.partial(
+                _prefill_chunk_fn, attn_backend=self.attn_backend)
+        else:
+            @functools.partial(jax.jit, static_argnames=("attn_backend",))
+            def _decode(params, cache, token, pos, attn_backend):
+                eng.decode_traces += 1  # python body runs only while tracing
+                with runtime.use_attn_backend(attn_backend):
+                    return M.decode_step(params, cache, token, pos, cfg_)
+
+            self._decode = functools.partial(_decode,
+                                             attn_backend=self.attn_backend)
+
+            @functools.partial(jax.jit, static_argnames=("attn_backend",))
+            def _prefill_one(params, tokens, last_index, attn_backend):
+                eng.prefill_traces += 1
+                with runtime.use_attn_backend(attn_backend):
+                    return M.prefill(params, {"tokens": tokens}, cfg_,
+                                     max_len=max_len, last_index=last_index)
+
+            self._prefill_one = functools.partial(
+                _prefill_one, attn_backend=self.attn_backend)
 
     # -- slot management ------------------------------------------------
 
     def _free_slot(self):
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
+        """Lowest free slot id, or None — O(1) via the free-slot list."""
+        return self._free_slots[0] if self._free_slots else None
+
+    def _take_slot(self, slot: int) -> None:
+        i = bisect.bisect_left(self._free_slots, slot)
+        if i == len(self._free_slots) or self._free_slots[i] != slot:
+            raise RuntimeError(f"slot {slot} is not free "
+                               f"(free list: {self._free_slots})")
+        self._free_slots.pop(i)
+
+    def release_slot(self, slot: int) -> None:
+        """Retire a slot: deactivate it, return its KV blocks to the pool
+        (paged) and put it back on the free list.  The scheduler calls this
+        when a request finishes; pairs with ``_begin_prefill``/``_admit``."""
+        self.active[slot] = None
+        self._prefilling.pop(slot, None)
+        if self.paged:
+            for bid in self._slot_blocks[slot]:
+                self.pool.release(bid)
+            self._slot_blocks[slot] = []
+            # point the row at the scratch block: a retired slot still rides
+            # the pooled decode step, and its writes must land nowhere real
+            self.block_tables[slot] = 0
+        bisect.insort(self._free_slots, slot)
 
     def _padded_prompt(self, prompt: list) -> list:
         """Right-pad to the power-of-two length bucket (token 0 as filler)."""
@@ -225,10 +348,63 @@ class ServeEngine:
 
     def _prefill_slot(self, slot: int, req: Request) -> np.ndarray:
         """B=1 prefill of ``req`` into pool ``slot``; returns the (V,)
-        first-token logits.  Splices the prompt's cache into the pool and
-        activates the slot — everything about admission EXCEPT choosing the
-        first token, which the caller does (greedy in ``_admit``, sampling
-        and timing in the scheduler)."""
+        first-token logits.  Fills the prompt's cache and activates the
+        slot — everything about admission EXCEPT choosing the first token,
+        which the caller does (greedy in ``_admit``, sampling and timing in
+        the scheduler).  Runs the WHOLE prefill synchronously; the chunked
+        path (``_begin_prefill`` + ``_prefill_step`` per scheduling round)
+        is how the scheduler keeps a long prompt from stalling the pool."""
+        self._begin_prefill(slot, req)
+        logits = self._prefill_step(slot)
+        while logits is None:
+            logits = self._prefill_step(slot)
+        return logits
+
+    def _begin_prefill(self, slot: int, req: Request) -> None:
+        """Claim ``slot`` for ``req`` and stage its prefill.
+
+        Paged engines match the prompt against the prefix cache here: the
+        longest cached FULL-block chain (capped at ``plen - 1`` tokens so
+        at least one real token is always prefilled — the first-token
+        logits must be computed from something) is spliced into the block
+        table copy-free, and prefill starts after it."""
+        self._take_slot(slot)
+        state = {"req": req, "next": 0}
+        if self.paged:
+            reused = self.pool.match_prefix(req.prompt,
+                                            max_tokens=len(req.prompt) - 1)
+            self._slot_blocks[slot] = list(reused)
+            for j, bid in enumerate(reused):
+                self.block_tables[slot, j] = bid
+            state["next"] = len(reused) * self.kv_block_size
+        self._prefilling[slot] = state
+
+    def prefilling_slots(self) -> list:
+        """Slots currently mid-prefill (claimed, not yet decoding)."""
+        return sorted(self._prefilling)
+
+    def _prefill_step(self, slot: int):
+        """Advance ``slot``'s staged prefill by one chunk.
+
+        Returns the (V,) first-token logits when the prompt completes (the
+        slot becomes active), else None.  Contiguous engines complete in
+        one step (the classic whole-prompt prefill + cache splice); paged
+        engines advance ``prefill_chunk`` tokens (everything remaining when
+        unset) into pool blocks allocated on demand."""
+        st = self._prefilling[slot]
+        req = st["req"]
+        if not self.paged:
+            logits = self._prefill_contiguous(slot, req)
+        else:
+            logits = self._prefill_paged_chunk(slot, st)
+            if logits is None:
+                return None
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = req
+        del self._prefilling[slot]
+        return logits
+
+    def _prefill_contiguous(self, slot: int, req: Request) -> np.ndarray:
         plen = len(req.prompt)
         # prefill the request alone (B=1), splice its cache into the pool
         tokens = jnp.asarray([self._padded_prompt(req.prompt)], jnp.int32)
@@ -250,9 +426,97 @@ class ServeEngine:
             return pool.at[:, slot].set(one)
 
         self.cache = jax.tree.map(splice, self.cache, cache1)
-        self.pos[slot] = plen
-        self.active[slot] = req
         return np.asarray(logits[0])
+
+    def _prefill_paged_chunk(self, slot: int, st: dict):
+        """One chunk of paged prefill; returns final logits or None."""
+        req = st["req"]
+        plen = len(req.prompt)
+        start = st["next"]
+        cap = self.prefill_chunk if self.prefill_chunk is not None else plen
+        take = min(plen - start, cap)
+        # pad the chunk to a power-of-two bucket (same O(log L) compile
+        # policy as contiguous prefill) unless that would run past max_len
+        c = take
+        if self.prefill_buckets:
+            lb = runtime.bucket_batch(take)
+            if start + lb <= self.max_len:
+                c = lb
+        bs = self.kv_block_size
+        blocks = self._slot_blocks[slot]
+        need = -(-(start + take) // bs)          # ceil: blocks covering chunk
+        try:
+            while len(blocks) < need:
+                bid = self.pool.alloc()
+                self.block_tables[slot, len(blocks)] = bid
+                blocks.append(bid)
+        except Exception:
+            self.release_slot(slot)
+            raise
+        chunk = req.prompt[start:start + take] + [0] * (c - take)
+        tokens = jnp.asarray([chunk], jnp.int32)
+        table = jnp.asarray(self.block_tables[slot])
+        with runtime.use_backend(self.kan_backend), runtime.use_mesh(self.mesh):
+            logits, self.cache = self._prefill_chunk_fn(
+                self.params, self.cache, tokens, table,
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(start + take, jnp.int32),
+                jnp.asarray(plen - 1, jnp.int32),
+            )
+        st["next"] = start + take
+        if st["next"] < plen:
+            return None
+        # publish the prompt's FULL blocks for future prefix hits (cached
+        # prefix blocks re-publish as no-ops); partial tail blocks — which
+        # decode will keep writing — are never shared
+        self.pool.publish_prefix(req.prompt, blocks[:plen // bs])
+        return np.asarray(logits[0])
+
+    def _ensure_decode_blocks(self) -> None:
+        """Allocate the pool block each active slot's NEXT write lands in
+        (decode writes at ``pos`` before attending); runs on host each
+        round, allocating at most one block per slot per call."""
+        bs = self.kv_block_size
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            blocks = self._slot_blocks[i]
+            if self.pos[i] // bs >= len(blocks):
+                bid = self.pool.alloc()
+                self.block_tables[i, len(blocks)] = bid
+                blocks.append(bid)
+
+    def decode_active(self, tokens) -> jax.Array:
+        """One pooled decode step over all slots; returns device logits
+        (slots, V) and updates the cache in place.  ``pos`` bookkeeping is
+        the caller's (the scheduler advances it after selecting tokens)."""
+        args = ()
+        if self.paged:
+            self._ensure_decode_blocks()
+            tables = self.block_tables
+            if self._prefilling:
+                # mid-prefill slots ride the pooled step with a stale pos;
+                # point their rows at the scratch block so the step's KV
+                # write can't corrupt the blocks their prefill is filling
+                tables = tables.copy()
+                for s in self._prefilling:
+                    tables[s] = 0
+            args = (jnp.asarray(tables),)
+        with runtime.use_backend(self.kan_backend), runtime.use_mesh(self.mesh):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(self.pos), *args,
+            )
+        return logits
+
+    def kv_stats(self) -> dict | None:
+        """Paged-pool observability (None on contiguous engines)."""
+        if not self.paged:
+            return None
+        s = self.pool.stats()
+        s["prefill_chunk"] = self.prefill_chunk
+        s["slot_blocks"] = [len(b) for b in self._slot_blocks]
+        return s
 
     # -- main loop --------------------------------------------------------
 
@@ -283,6 +547,7 @@ class ServeEngine:
             "plan_cache": runtime.cache_stats(),
             "mesh": self.mesh_layout(),
             "attn_backend": self.attn_backend,
+            "kv": self.kv_stats(),
         }
 
     def mesh_layout(self) -> dict | None:

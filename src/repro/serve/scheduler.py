@@ -51,8 +51,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import runtime
-
 __all__ = [
     "ManualClock",
     "QueueFull",
@@ -244,7 +242,14 @@ class Scheduler:
     # -- one scheduling round --------------------------------------------
 
     def step(self) -> bool:
-        """Expire, admit, then advance the pool by one decode step.
+        """Expire, admit, advance staged prefills, then one decode step.
+
+        With chunked prefill (``engine.prefill_chunk``) each round advances
+        every mid-prefill slot by ONE chunk before the pooled decode, so a
+        long prompt prefills interleaved with decode instead of stalling
+        the whole pool; without it admission prefills whole prompts
+        synchronously (the classic path — greedy streams bit-identical to
+        the pre-scheduler loop).
 
         Returns True if any progress was made (a prefill or a decode ran);
         False means the scheduler is idle right now — either fully drained,
@@ -253,6 +258,7 @@ class Scheduler:
         now = self.elapsed()
         self._expire(now)
         progressed = self._admit_arrived(now)
+        progressed = self._advance_prefills() or progressed
         depth = len(self.queue)
         self._depth_samples.append((now, depth))
         self._depth_rounds += 1
@@ -271,7 +277,8 @@ class Scheduler:
         :class:`ManualClock`).
         """
         eng = self.engine
-        while self.queue or any(r is not None for r in eng.active):
+        while (self.queue or any(r is not None for r in eng.active)
+               or eng.prefilling_slots()):
             if not self.step() and self.queue:
                 nxt = min(r.arrival_s for r in self.queue)
                 self._wait(nxt - self.elapsed())
@@ -310,23 +317,51 @@ class Scheduler:
             if idx is None:
                 break
             req = self.queue.pop(idx)
+            if eng.prefill_chunk is not None:
+                # chunked prefill: claim the slot now, advance one chunk per
+                # round (_advance_prefills) — the first token is emitted
+                # when the prompt completes
+                eng._begin_prefill(slot, req)
+                req.status = "running"
+                admitted = True
+                self.log(f"admitted request {req.rid} (chunked prefill); "
+                         f"{len(self.queue)} queued")
+                continue
             logits = eng._prefill_slot(slot, req)
-            t = self.elapsed()
-            tok = self._select(req, logits)
-            req.output.append(tok)
-            req.status = "running"
-            req.ttft_s = t - req.arrival_s
-            self._ttfts.append(req.ttft_s)
-            self._rec[req.rid] = {
-                "arrival": req.arrival_s, "admit": t, "token_times": [t],
-            }
-            if self._span_start is None or t < self._span_start:
-                self._span_start = t
-            self._span_end = t
-            self._emit(req, tok)
+            self._first_token(req, logits)
             admitted = True
             self.log(f"admitted request {req.rid}; {len(self.queue)} queued")
         return admitted
+
+    def _advance_prefills(self) -> bool:
+        """One chunk of progress for every mid-prefill slot (chunked mode);
+        emits the first token of any prompt that completes this round."""
+        eng = self.engine
+        progressed = False
+        for slot in eng.prefilling_slots():
+            req = eng._prefilling[slot]["req"]
+            logits = eng._prefill_step(slot)
+            progressed = True
+            if logits is not None:
+                self._first_token(req, logits)
+                self.log(f"request {req.rid} prefill complete")
+        return progressed
+
+    def _first_token(self, req, logits) -> None:
+        """Select and record a freshly-prefilled request's first token."""
+        t = self.elapsed()
+        tok = self._select(req, logits)
+        req.output.append(tok)
+        req.status = "running"
+        req.ttft_s = t - req.arrival_s
+        self._ttfts.append(req.ttft_s)
+        self._rec[req.rid] = {
+            "arrival": req.arrival_s, "admit": t, "token_times": [t],
+        }
+        if self._span_start is None or t < self._span_start:
+            self._span_start = t
+        self._span_end = t
+        self._emit(req, tok)
 
     def _decode_round(self) -> None:
         eng = self.engine
@@ -334,11 +369,7 @@ class Scheduler:
         for i, r in enumerate(eng.active):
             if r is not None:
                 tokens[i] = r.output[-1]
-        with runtime.use_backend(eng.kan_backend), runtime.use_mesh(eng.mesh):
-            logits, eng.cache = eng._decode(
-                eng.params, eng.cache, jnp.asarray(tokens),
-                jnp.asarray(eng.pos),
-            )
+        logits = eng.decode_active(tokens)
         self.decode_steps += 1
         # pure-greedy pools (the common case, and all of run()) take the
         # device-side argmax — transferring B ints per step, not the whole
@@ -372,7 +403,7 @@ class Scheduler:
                 r.latency_s = t - rec["admit"]
                 self.completed += 1
                 self.finished.append(r)
-                eng.active[i] = None
+                eng.release_slot(i)
                 self._finish_cb(r)
                 self._retire(r.rid)
                 self.log(f"request {r.rid} done ({len(r.output)} tokens, "
@@ -447,7 +478,9 @@ class Scheduler:
             "rejected": self.rejected,
             "queued": len(self.queue),
             "active": sum(r is not None for r in self.engine.active),
+            "prefilling": len(self.engine.prefilling_slots()),
             "decode_steps": self.decode_steps,
+            "kv": self.engine.kv_stats(),
             "tokens": tokens,
             "tokens_per_s": (tokens / span) if span > 0 else None,
             "ttft_s": _summary(list(self._ttfts)),

@@ -1,0 +1,349 @@
+"""Paged KV pool correctness (the PR-7 acceptance contract).
+
+Two layers of guarantees:
+
+  * :class:`KVBlockPool` bookkeeping — free-list allocation, refcounts,
+    hash-keyed prefix publish/match, LRU eviction and the
+    ``check_consistent`` partition invariant (every allocatable block is
+    in exactly one of free / referenced / evictable, hash maps mirror).
+  * The load-bearing serving invariant: greedy token streams on the PAGED
+    engine are BIT-IDENTICAL to the contiguous-slab engine on the same
+    request set — per runtime backend (``ref`` / ``pallas`` / quiet
+    ``acim``), with chunked prefill, with prefix-cache hits splicing
+    shared blocks, and on a 1x1 mesh — because the paged decode gathers
+    the block table into exactly the contiguous cache's view and masked
+    softmax lanes contribute exact zeros regardless of stale block
+    contents.
+"""
+
+import random
+
+import jax
+import pytest
+
+from repro import runtime
+from repro.configs.registry import smoke_config
+from repro.models.model import init_params
+from repro.runtime.executor import ACIMExecutor
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvpool import (
+    SCRATCH_BLOCK,
+    KVBlockPool,
+    KVPoolExhausted,
+    hash_token_blocks,
+)
+
+# zero-noise acim: traces the same program as "pallas", so its greedy
+# streams take part in the bit-identity acceptance (test_scheduler idiom)
+runtime.register_executor(
+    "acim-quiet", ACIMExecutor(cim=runtime.quiet_cim_config())
+)
+
+
+@pytest.fixture(scope="module")
+def kan_setup():
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def make_reqs(cfg, n=2, plen=5, max_new=3, seed=42, prefix=()):
+    rng = jax.random.PRNGKey(seed)
+    reqs = []
+    for rid in range(n):
+        rng, k = jax.random.split(rng)
+        tail = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
+        reqs.append(Request(rid=rid, prompt=list(prefix) + tail,
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def streams(engine, reqs):
+    return {r.rid: r.output for r in engine.run(reqs)}
+
+
+# ---------------------------------------------------------------------------
+# KVBlockPool bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_release_roundtrip():
+    pool = KVBlockPool(num_blocks=5, block_size=8)
+    got = [pool.alloc() for _ in range(4)]  # all allocatable blocks
+    assert sorted(got) == [1, 2, 3, 4]      # scratch block 0 never handed out
+    assert pool.blocks_in_use() == 4
+    assert pool.peak_in_use == 4
+    with pytest.raises(KVPoolExhausted):
+        pool.alloc()
+    for bid in got:
+        pool.release(bid)
+    assert pool.blocks_in_use() == 0
+    assert pool.peak_in_use == 4            # peak survives the drain
+    pool.check_consistent()
+    # released ids are allocatable again
+    assert sorted(pool.alloc() for _ in range(4)) == [1, 2, 3, 4]
+
+
+def test_pool_refcount_and_scratch_guards():
+    pool = KVBlockPool(num_blocks=4, block_size=2)
+    bid = pool.alloc()
+    pool.retain(bid)
+    pool.release(bid)
+    assert pool.blocks_in_use() == 1        # still referenced once
+    pool.release(bid)
+    assert pool.blocks_in_use() == 0
+    with pytest.raises(ValueError):
+        pool.release(bid)                   # double release
+    with pytest.raises(ValueError):
+        pool.retain(SCRATCH_BLOCK)
+    with pytest.raises(ValueError):
+        KVBlockPool(num_blocks=1, block_size=2)
+    with pytest.raises(ValueError):
+        KVBlockPool(num_blocks=4, block_size=0)
+    pool.check_consistent()
+
+
+def test_hash_token_blocks_chain_property():
+    # only FULL blocks are hashed, and hash i folds in hash i-1: equal
+    # hashes at chunk i imply the whole prefix matches
+    assert hash_token_blocks([1, 2, 3], 4) == []
+    a = hash_token_blocks([1, 2, 3, 4, 5, 6, 7, 8, 9], 4)
+    b = hash_token_blocks([1, 2, 3, 4, 5, 6, 7, 99], 4)
+    assert len(a) == 2 and len(b) == 2
+    assert a[0] == b[0] and a[1] != b[1]
+    c = hash_token_blocks([9, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert c[0] != a[0]
+    assert c[1] != a[1]                     # divergence propagates
+
+
+def test_pool_prefix_publish_match_evict():
+    pool = KVBlockPool(num_blocks=6, block_size=4)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9]    # 2 full blocks + partial
+    blocks = [pool.alloc(), pool.alloc()]
+    pool.publish_prefix(prompt, blocks)
+    for bid in blocks:
+        pool.release(bid)
+    assert pool.blocks_cached() == 2        # kept evictable for future hits
+    # same prefix, different tail: both full blocks hit and are retained
+    hit = pool.match_prefix([1, 2, 3, 4, 5, 6, 7, 8, 42], max_tokens=8)
+    assert hit == blocks
+    assert pool.hits == 2 and pool.misses == 0
+    assert pool.blocks_in_use() == 2 and pool.blocks_cached() == 0
+    # max_tokens caps the usable prefix to FULL blocks below it
+    pool2 = KVBlockPool(num_blocks=6, block_size=4)
+    b2 = [pool2.alloc(), pool2.alloc()]
+    pool2.publish_prefix(prompt, b2)
+    assert pool2.match_prefix(prompt, max_tokens=len(prompt) - 1) == b2[:2]
+    assert pool2.match_prefix([1, 2, 3, 4, 5], max_tokens=4) == b2[:1]
+    # divergent first block: clean miss
+    assert pool.match_prefix([9, 9, 9, 9], max_tokens=4) == []
+    for bid in hit:
+        pool.release(bid)
+    pool.check_consistent()
+    # exhaustion now evicts the LRU cached block instead of raising
+    keep = [pool.alloc() for _ in range(3)]
+    assert pool.evictions == 0
+    extra = pool.alloc()                    # 4th + 5th: evict cached blocks
+    extra2 = pool.alloc()
+    assert pool.evictions == 2
+    assert pool.blocks_cached() == 0
+    assert sorted(keep + [extra, extra2]) == [1, 2, 3, 4, 5]
+    pool.check_consistent()
+
+
+def test_pool_prefix_cache_off_degrades_to_allocator():
+    pool = KVBlockPool(num_blocks=4, block_size=2, prefix_cache=False)
+    bid = pool.alloc()
+    pool.publish_prefix([1, 2, 3, 4], [bid])
+    pool.release(bid)
+    assert pool.blocks_cached() == 0        # nothing published
+    assert pool.match_prefix([1, 2, 3, 4]) == []
+    assert pool.hit_rate() == 0.0
+    pool.check_consistent()
+
+
+def test_pool_randomized_workout_stays_consistent():
+    rng = random.Random(7)
+    pool = KVBlockPool(num_blocks=12, block_size=2)
+    held = []
+    for step in range(500):
+        op = rng.random()
+        if op < 0.45:
+            try:
+                held.append(pool.alloc())
+            except KVPoolExhausted:
+                pass
+        elif op < 0.8 and held:
+            pool.release(held.pop(rng.randrange(len(held))))
+        else:
+            prompt = [rng.randrange(50) for _ in range(rng.randrange(1, 9))]
+            hit = pool.match_prefix(prompt)
+            if not hit and len(prompt) >= 2 and held:
+                pool.publish_prefix(prompt, held[:len(prompt) // 2])
+            held.extend(hit)
+        pool.check_consistent()
+    stats = pool.stats()
+    assert stats["allocs"] > 0
+    assert stats["blocks_in_use"] == len(set(held))  # held may alias hits
+    assert stats["blocks_in_use_peak"] <= pool.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged == contiguous bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas", "acim-quiet"])
+def test_paged_streams_bit_identical_to_contiguous(kan_setup, backend):
+    """Acceptance: whole-prompt paged prefill + paged decode serve the
+    exact greedy streams of the contiguous slab, per runtime backend."""
+    cfg, params = kan_setup
+    base = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                       kan_backend=backend)
+    want = streams(base, make_reqs(cfg, n=4, plen=5, max_new=4))
+    paged = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                        kan_backend=backend, kv_block_size=8)
+    got = streams(paged, make_reqs(cfg, n=4, plen=5, max_new=4))
+    assert got == want
+    paged.pool.check_consistent()
+    # every slot drained back to the free list, no block leaked
+    assert paged._free_slots == list(range(paged.slots))
+    assert paged.pool.blocks_in_use() == 0
+
+
+def test_chunked_prefill_streams_bit_identical(kan_setup):
+    """Chunked prefill (interleaved with pooled decode by the scheduler)
+    must not change a single token vs the contiguous path."""
+    cfg, params = kan_setup
+    base = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
+    want = streams(base, make_reqs(cfg, n=3, plen=11, max_new=4))
+    paged = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                        kv_block_size=8, prefill_chunk=4)
+    got = streams(paged, make_reqs(cfg, n=3, plen=11, max_new=4))
+    assert got == want
+    # 11-token prompts in 4-token chunks, bucketed: one prefill trace
+    assert paged.compile_stats()["prefill_traces"] == 1
+    paged.pool.check_consistent()
+    assert paged.pool.blocks_in_use() == 0
+
+
+def test_prefix_cache_hits_and_streams_match(kan_setup):
+    """Shared-prefix requests splice cached blocks (hit rate > 0) and STILL
+    serve bit-identical streams — a cache hit must be invisible."""
+    cfg, params = kan_setup
+    prefix = [7] * 16                        # 2 full 8-token blocks
+    base = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
+    want = streams(base, make_reqs(cfg, n=4, plen=3, max_new=3,
+                                   prefix=prefix))
+    paged = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                        kv_block_size=8, prefix_cache=True)
+    got = streams(paged, make_reqs(cfg, n=4, plen=3, max_new=3,
+                                   prefix=prefix))
+    assert got == want
+    s = paged.kv_stats()
+    assert s["prefix_hits"] > 0
+    assert s["prefix_hit_rate"] > 0
+    assert s["blocks_cached"] > 0            # the shared blocks stay cached
+    paged.pool.check_consistent()
+    # cache off: same streams, no hits
+    off = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                      kv_block_size=8, prefix_cache=False)
+    assert streams(off, make_reqs(cfg, n=4, plen=3, max_new=3,
+                                  prefix=prefix)) == want
+    assert off.kv_stats()["prefix_hits"] == 0
+
+
+def test_paged_mesh_1x1_matches_contiguous(kan_setup):
+    """Paged serving under a mesh (1x1 degenerate case — sharding machinery
+    on, one device) matches the unmeshed contiguous engine."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg, params = kan_setup
+    base = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
+    want = streams(base, make_reqs(cfg, n=3, plen=5, max_new=3))
+    paged = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                        kv_block_size=8, prefill_chunk=4,
+                        mesh=make_local_mesh(1, 1))
+    assert streams(paged, make_reqs(cfg, n=3, plen=5, max_new=3)) == want
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+def test_paged_data_mesh_matches_contiguous(kan_setup):
+    """Paged KV blocks shard across the data axis; streams must not move."""
+    from repro.launch.mesh import make_local_mesh
+
+    cfg, params = kan_setup
+    n = len(jax.devices())
+    base = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True)
+    want = streams(base, make_reqs(cfg, n=3, plen=5, max_new=3))
+    paged = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                        kv_block_size=8, mesh=make_local_mesh(n, 1))
+    assert streams(paged, make_reqs(cfg, n=3, plen=5, max_new=3)) == want
+    paged.pool.check_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Engine: slot free-list + pool lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_free_slot_list_tracks_slot_lifecycle(kan_setup):
+    """The O(log slots) free-slot list is the slot-occupancy ground truth:
+    it mirrors ``active`` through take/release and survives mid-prefill
+    aborts (pool exhaustion releases the claimed slot)."""
+    cfg, params = kan_setup
+    eng = ServeEngine(params, cfg, slots=3, max_len=32, kan_deploy=True,
+                      kv_block_size=8)
+
+    def check():
+        free = set(eng._free_slots)
+        busy = {i for i, r in enumerate(eng.active)
+                if r is not None} | set(eng._prefilling)
+        assert eng._free_slots == sorted(free)   # kept sorted (bisect)
+        assert free | busy == set(range(eng.slots))
+        assert not free & busy
+
+    check()
+    reqs = make_reqs(cfg, n=3, plen=5, max_new=2)
+    logits = eng._prefill_slot(eng._free_slot(), reqs[0])
+    assert logits is not None
+    check()
+    assert eng._free_slot() == 1                 # lowest free slot first
+    with pytest.raises(RuntimeError):
+        eng._take_slot(0)                        # slot 0 is occupied
+    eng.release_slot(0)
+    check()
+    assert eng._free_slot() == 0
+    # release is idempotent-hostile by design: double release must raise
+    # via _take_slot when re-claiming an already-free slot is attempted
+    eng._take_slot(0)
+    eng.release_slot(0)
+    check()
+    assert eng.pool.blocks_in_use() == 0
+
+
+def test_paged_engine_validation(kan_setup):
+    cfg, params = kan_setup
+    with pytest.raises(ValueError):  # not a multiple of the flash KV tile
+        ServeEngine(params, cfg, slots=2, max_len=32, kv_block_size=6)
+    with pytest.raises(ValueError):  # must divide max_len
+        ServeEngine(params, cfg, slots=2, max_len=40, kv_block_size=16)
+    with pytest.raises(ValueError):  # chunked prefill needs the pool
+        ServeEngine(params, cfg, slots=2, max_len=32, prefill_chunk=4)
+
+
+def test_pool_exhaustion_surfaces_and_releases_slot(kan_setup):
+    """An undersized pool fails loudly at admission (KVPoolExhausted names
+    the fix) and the claimed slot goes back to the free list."""
+    cfg, params = kan_setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                      kv_block_size=8, kv_blocks=2)  # 1 allocatable block
+    req = make_reqs(cfg, n=1, plen=10, max_new=2)[0]  # needs 2 blocks
+    with pytest.raises(KVPoolExhausted):
+        eng._prefill_slot(eng._free_slot(), req)
+    assert eng._free_slots == [0, 1]
+    assert eng.pool.blocks_in_use() == 0
+    eng.pool.check_consistent()

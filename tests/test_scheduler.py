@@ -237,6 +237,47 @@ def test_scheduler_adopts_slots_admitted_directly_on_engine(float_setup):
     assert r1.status == "done" and len(r1.output) == 4
 
 
+def test_long_lived_scheduler_memory_stays_bounded(float_setup):
+    """Memory-bounds regression for a long-lived scheduler: hundreds of
+    requests through ONE scheduler (paged engine, chunked prefill) must
+    leave only capped/scalar state behind — stat tails capped at 4096,
+    per-request records bounded by the slot count, callback maps emptied
+    on retire, finished drained by the caller, and the KV pool back to
+    empty with a consistent free/ref/evictable partition."""
+    cfg, params = float_setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=32,
+                      kv_block_size=8, prefill_chunk=4)
+    sched = Scheduler(eng)
+    total, wave = 520, 65
+    for start in range(0, total, wave):
+        for rid in range(start, start + wave):
+            # fixed-shape prompts: one prefill trace, the loop stays fast
+            sched.submit(Request(rid=rid, prompt=[3 + rid % 29] * 5,
+                                 max_new_tokens=1),
+                         on_token=lambda r, t: None,
+                         on_done=lambda r: None)
+        sched.run_until_idle()
+        drained = sched.drain_finished()
+        assert len(drained) == wave and not sched.finished
+        # per-request state lives only while a request is active
+        assert len(sched._rec) <= eng.slots
+        assert not sched._on_token and not sched._on_done
+    s = sched.stats()
+    assert s["submitted"] == total and s["completed"] == total
+    # prefill token + the decode round that observes len >= max_new
+    assert s["tokens"] == 2 * total
+    # stat tails are capped deques — a long-lived scheduler's footprint
+    # does not grow with total requests served
+    for tail in (sched._ttfts, sched._itls, sched._depth_samples):
+        assert tail.maxlen == 4096 and len(tail) <= 4096
+    assert s["ttft_s"]["n"] == min(total, 4096)
+    assert s["queue_depth"]["rounds"] >= s["queue_depth"]["samples"]
+    # the paged pool drained clean: no leaked blocks, invariants hold
+    assert eng.pool.blocks_in_use() == 0
+    assert eng._free_slots == list(range(eng.slots))
+    eng.pool.check_consistent()
+
+
 def test_request_defaults_keep_old_call_sites_working():
     """Pre-scheduler construction (rid/prompt/max_new_tokens only) must keep
     working: arrival 'now', no deadline, greedy."""
