@@ -102,6 +102,8 @@ def _bench_serve(requests: int, max_new: int, print_fn=print,
     from repro.models.model import init_params
     from repro.serve.engine import Request, ServeEngine
 
+    from repro import runtime
+
     cfg = smoke_config("qwen2.5-14b").kan_variant()
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, slots=2, max_len=64, kan_deploy=True,
@@ -113,11 +115,14 @@ def _bench_serve(requests: int, max_new: int, print_fn=print,
         plen = 4 + rid % 7  # mixed lengths exercise the prefill buckets
         prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
         reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    pc0 = runtime.cache_stats()
+    d0 = dict(runtime.dispatch_counts())
     t0 = time.perf_counter()
     results = engine.run(reqs)
     wall = time.perf_counter() - t0
     total = sum(len(r.output) for r in results)
     stats = engine.compile_stats()
+    pc1 = runtime.cache_stats()
     row = {
         "arch": "qwen2.5-14b-kanffn",
         "requests": requests,
@@ -126,6 +131,16 @@ def _bench_serve(requests: int, max_new: int, print_fn=print,
         "prefill_traces": stats["prefill_traces"],
         "decode_traces": stats["decode_traces"],
         "mesh": stats["mesh"],
+        # this leg's slice of the process-wide runtime counters (the same
+        # series the obs registry exports; docs/observability.md)
+        "plan_cache": {k: pc1[k] - pc0[k]
+                       for k in ("hits", "misses", "traces")},
+        "backend_dispatch": {
+            k: v - d0.get(k, 0)
+            for k, v in sorted(runtime.dispatch_counts().items())
+            if v - d0.get(k, 0)
+        },
+        "kv": engine.kv_stats(),
     }
     print_fn(
         f"serve,arch={row['arch']},tokens={total},"
@@ -165,6 +180,7 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
     """
     import random as _random
 
+    from repro import runtime
     from repro.configs.registry import smoke_config
     from repro.models.model import init_params
     from repro.serve.engine import Request, ServeEngine
@@ -214,6 +230,10 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         engine.run(warm)
         if engine.paged:
             engine.pool.reset_stats()  # warm prompts are not workload hits
+        # counter baselines AFTER warmup: the leg's plan-cache / dispatch
+        # slice reflects the measured schedule, not compile warming
+        pc0 = runtime.cache_stats()
+        d0 = dict(runtime.dispatch_counts())
         # build the request list BEFORE the scheduler: its construction
         # starts the arrival_s timebase, and request construction must not
         # eat into the schedule (submit bumps past offsets to "now")
@@ -226,6 +246,7 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         sched.run_until_idle()
         s = sched.stats()
         kv = s["kv"]
+        pc1 = runtime.cache_stats()
         row = {
             **label,
             "requests": requests,
@@ -247,6 +268,14 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
                                       else kv["blocks_in_use_peak"]),
             "kv_blocks_cached": None if kv is None else kv["blocks_cached"],
             "kv_evictions": None if kv is None else kv["evictions"],
+            "kv_allocs": None if kv is None else kv["allocs"],
+            "plan_cache": {k: pc1[k] - pc0[k]
+                           for k in ("hits", "misses", "traces")},
+            "backend_dispatch": {
+                k: v - d0.get(k, 0)
+                for k, v in sorted(runtime.dispatch_counts().items())
+                if v - d0.get(k, 0)
+            },
         }
         print_fn(
             f"sustained,backend={row['backend']},kv={row['kv']},"

@@ -23,16 +23,22 @@
     # greedy streams stay bit-identical to the contiguous slab):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --kv-block-size 16 --prefix-cache on --prefill-chunk 32
+    # observability: metrics registry + request tracing (docs/observability.md)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --metrics-dump metrics.prom --metrics-dump metrics.json \
+        --trace-out trace.jsonl --stats-interval 1.0
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
 
+from .. import obs
 from ..configs.registry import smoke_config
 from ..models.model import init_params
 from ..serve.engine import Request, ServeEngine
@@ -119,7 +125,42 @@ def main():
              "long prompt can't stall TTFT for the pool; default prefills "
              "whole prompts at admission",
     )
+    ap.add_argument(
+        "--metrics-port", type=int, default=None, metavar="PORT",
+        help="enable the obs metrics registry and serve Prometheus text at "
+             "http://127.0.0.1:PORT/metrics (JSON at /metrics.json); 0 "
+             "picks an ephemeral port",
+    )
+    ap.add_argument(
+        "--metrics-dump", action="append", default=None, metavar="PATH",
+        help="enable the obs metrics registry and write a snapshot at "
+             "shutdown: '.json' suffix -> JSON snapshot, anything else -> "
+             "Prometheus text exposition; repeatable",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="record one span tree per request and export it at shutdown: "
+             "'.json' suffix -> Chrome trace-event JSON (chrome://tracing), "
+             "anything else (e.g. '.jsonl') -> JSONL span records",
+    )
+    ap.add_argument(
+        "--log-level", default=None,
+        choices=("debug", "info", "warning", "error"),
+        help="structured-logger threshold (sets REPRO_LOG_LEVEL for this "
+             "process); debug shows per-request scheduler chatter",
+    )
+    ap.add_argument(
+        "--stats-interval", type=float, default=None, metavar="S",
+        help="emit a one-line scheduler stats summary every S seconds "
+             "through the structured logger",
+    )
     args = ap.parse_args()
+
+    if args.log_level:
+        os.environ[obs.ENV_LOG_LEVEL_VAR] = args.log_level
+    if args.metrics_port is not None or args.metrics_dump:
+        obs.enable()
+    log = obs.get_logger("serve")
 
     cfg = smoke_config(args.arch)
     tuned_note = ""
@@ -164,32 +205,38 @@ def main():
                          prefill_chunk=args.prefill_chunk)
     if engine.paged:
         kv = engine.kv_stats()
-        print(f"paged kv: {kv['num_blocks']} blocks x {kv['block_size']} "
-              f"tokens, prefix cache "
-              f"{'on' if kv['prefix_cache'] else 'off'}, prefill chunk "
-              f"{kv['prefill_chunk'] or 'whole-prompt'}")
-    fused_note = (" (fully-fused decode: attention + KAN-FFN both Pallas)"
-                  if engine.attn_backend == "flash" and args.kan_ffn else "")
-    print(f"attention backend: {engine.attn_backend}{fused_note}")
+        log.info("paged kv", blocks=kv["num_blocks"],
+                 block_size=kv["block_size"],
+                 prefix_cache="on" if kv["prefix_cache"] else "off",
+                 prefill_chunk=kv["prefill_chunk"] or "whole-prompt")
+    log.info("attention backend", backend=engine.attn_backend,
+             fused_decode=engine.attn_backend == "flash" and args.kan_ffn)
     if mesh is not None:
         layout = engine.mesh_layout()
-        print("mesh: " + " x ".join(
-            f"{a}={s}" for a, s in zip(layout["axes"], layout["shape"])
-        ) + f" ({layout['devices']} of {len(jax.devices())} devices; "
-            f"slots {'sharded' if layout['slots_sharded'] else 'replicated'}"
-            " on data)")
+        log.info("mesh",
+                 shape=" x ".join(f"{a}={s}" for a, s in
+                                  zip(layout["axes"], layout["shape"])),
+                 devices=f"{layout['devices']}/{len(jax.devices())}",
+                 slots=("sharded" if layout["slots_sharded"]
+                        else "replicated"))
     if args.kan_ffn:
-        print(f"kan-ffn: G={cfg.kan_grid} K={cfg.kan_order} "
-              f"n_bits={cfg.kan_n_bits}, plan source: "
-              f"{engine.kan_plan_source()}{tuned_note}")
+        log.info("kan-ffn", G=cfg.kan_grid, K=cfg.kan_order,
+                 n_bits=cfg.kan_n_bits,
+                 plan_source=engine.kan_plan_source() + tuned_note)
+
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = obs.start_metrics_server(args.metrics_port)
+        log.info("metrics server",
+                 url=f"http://127.0.0.1:{metrics_server.server_port}/metrics")
 
     sampling = None
     if args.sampling > 0.0:
         sampling = SamplingParams(temperature=args.sampling, top_k=args.top_k,
                                   top_p=args.top_p, seed=args.seed)
-        print(f"sampling: temperature={sampling.temperature} "
-              f"top_k={sampling.top_k} top_p={sampling.top_p} "
-              f"seed={sampling.seed}")
+        log.info("sampling", temperature=sampling.temperature,
+                 top_k=sampling.top_k, top_p=sampling.top_p,
+                 seed=sampling.seed)
 
     rng = jax.random.PRNGKey(1)
     reqs = []
@@ -203,7 +250,9 @@ def main():
                             deadline_s=args.deadline, sampling=sampling))
 
     sched = Scheduler(engine, max_queue=args.queue_limit,
-                      log=None if args.stream else print)
+                      log=None if args.stream else print,
+                      trace=args.trace_out is not None,
+                      stats_interval_s=args.stats_interval)
     on_token = None
     if args.stream:
         on_token = lambda r, tok: print(f"  req {r.rid} += {tok}", flush=True)
@@ -213,46 +262,58 @@ def main():
             sched.submit(r, on_token=on_token)
         except QueueFull as e:
             dropped += 1
-            print(f"backpressure: {e}")
+            log.warning("backpressure", detail=str(e))
     t0 = time.perf_counter()
     results = sched.run_until_idle()
     wall = time.perf_counter() - t0
     served = [r for r in results if r.status == "done"]
     total = sum(len(r.output) for r in served)
     stats = engine.compile_stats()
-    print(f"served {len(served)} requests / {total} tokens "
-          f"({total / wall:.1f} tok/s)"
-          + (f"; {dropped} rejected at submit" if dropped else ""))
-    print(f"compiles: prefill={stats['prefill_traces']} "
-          f"decode={stats['decode_traces']}; "
-          f"kan plan cache: {stats['plan_cache']}")
+    log.info("served", requests=len(served), tokens=total,
+             tokens_per_s=round(total / wall, 1), rejected=dropped)
+    log.info("compiles", prefill=stats["prefill_traces"],
+             decode=stats["decode_traces"],
+             kan_plan_cache=stats["plan_cache"])
     # shutdown metrics summary (the docs/serving.md glossary)
     s = sched.stats()
 
     def _ms(v):
         return "n/a" if v is None else f"{v * 1e3:.1f}ms"
 
-    print(f"scheduler: submitted={s['submitted']} completed={s['completed']} "
-          f"expired={s['expired']} rejected={s['rejected']}")
-    print(f"  ttft p50={_ms(s['ttft_s']['p50'])} p95={_ms(s['ttft_s']['p95'])}"
-          f"; itl p50={_ms(s['itl_s']['p50'])} p95={_ms(s['itl_s']['p95'])}"
-          f"; tokens/s={0.0 if s['tokens_per_s'] is None else s['tokens_per_s']:.1f}")
-    print(f"  queue depth max={s['queue_depth']['max']} "
-          f"mean={s['queue_depth']['mean']:.2f} "
-          f"over {s['queue_depth']['samples']} samples")
+    log.info("scheduler", submitted=s["submitted"], completed=s["completed"],
+             expired=s["expired"], rejected=s["rejected"])
+    ttft = s["ttft_s"] or {"p50": None, "p95": None}
+    log.info("latency", ttft_p50=_ms(ttft["p50"]), ttft_p95=_ms(ttft["p95"]),
+             itl_p50=_ms(s["itl_s"]["p50"]), itl_p95=_ms(s["itl_s"]["p95"]),
+             tokens_per_s=round(s["tokens_per_s"] or 0.0, 1))
+    log.info("queue depth", max=s["queue_depth"]["max"],
+             mean=round(s["queue_depth"]["mean"], 2),
+             samples=s["queue_depth"]["samples"])
     if s["kv"] is not None:
         kv = s["kv"]
-        print(f"  kv pool: hit rate={kv['prefix_hit_rate']:.2f} "
-              f"({kv['prefix_hits']}/{kv['prefix_hits'] + kv['prefix_misses']}"
-              f" blocks), in use={kv['blocks_in_use']} "
-              f"cached={kv['blocks_cached']} free={kv['blocks_free']} "
-              f"evictions={kv['evictions']}")
+        log.info("kv pool", hit_rate=round(kv["prefix_hit_rate"], 2),
+                 hits=kv["prefix_hits"], misses=kv["prefix_misses"],
+                 in_use=kv["blocks_in_use"], cached=kv["blocks_cached"],
+                 free=kv["blocks_free"], evictions=kv["evictions"])
     if mesh is not None:
         from .. import runtime
 
         for fp, reasons in runtime.shard_notes().items():
             for r in reasons:
-                print(f"shard fallback: {r}")
+                log.warning("shard fallback", reason=r)
+
+    if args.trace_out:
+        if args.trace_out.endswith(".json"):
+            sched.tracer.export_chrome(args.trace_out)
+        else:
+            sched.tracer.export_jsonl(args.trace_out)
+        log.info("trace written", path=args.trace_out,
+                 records=len(sched.tracer.records()))
+    for path in args.metrics_dump or ():
+        obs.dump_metrics(path)
+        log.info("metrics dump written", path=path)
+    if metrics_server is not None:
+        metrics_server.shutdown()
 
 
 if __name__ == "__main__":

@@ -29,10 +29,12 @@ from .executor import (
     RefExecutor,
     available_backends,
     default_interpret,
+    dispatch_counts,
     get_executor,
     quiet_cim_config,
     ref_composition,
     register_executor,
+    reset_dispatch_counts,
     resolve_backend,
     use_backend,
 )
@@ -60,6 +62,8 @@ __all__ = [
     "cache_stats",
     "default_attn_backend",
     "default_interpret",
+    "dispatch_counts",
+    "reset_dispatch_counts",
     "execute",
     "get_executor",
     "mesh_axis_sizes",

@@ -38,6 +38,7 @@ unsharded entries never collide.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import contextvars
 import dataclasses
@@ -48,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import REGISTRY as _OBS_REGISTRY
+from ..obs.trace import profile_scope
 from ..core.asp_quant import dense_basis_from_codes, quantize_input
 from ..core.cim import CIMConfig
 from ..core.tmdv import TMDVConfig, apply_input_noise
@@ -70,6 +73,8 @@ from .plancache import PLAN_CACHE, PlanKey, bucket_batch
 __all__ = [
     "ENV_BACKEND_VAR",
     "default_interpret",
+    "dispatch_counts",
+    "reset_dispatch_counts",
     "register_executor",
     "available_backends",
     "resolve_backend",
@@ -84,6 +89,22 @@ __all__ = [
 ]
 
 ENV_BACKEND_VAR = "REPRO_KAN_BACKEND"
+
+# Per-backend dispatch counts (host-side calls through _CachedExecutor):
+# always on — one dict increment per KAN execution — so the benchmark legs
+# can report them without enabling the obs registry; obs pulls them at
+# snapshot time as ``runtime.backend_dispatch{backend=...}``.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of per-backend KAN dispatch counts since process start (or
+    the last :func:`reset_dispatch_counts`)."""
+    return dict(DISPATCH_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
 
 
 def default_interpret() -> bool:
@@ -263,9 +284,11 @@ class _CachedExecutor:
             mesh=mesh_fp,
         )
         _, apply = PLAN_CACHE.get(plan_key, self._build)
-        out = self._run(apply, _pad_batch(codes, bucket),
-                        _pad_batch(xraw, bucket), dep.layers, key,
-                        return_intermediates)
+        DISPATCH_COUNTS[self.name] += 1
+        with profile_scope(f"kan_spline.{self.name}"):
+            out = self._run(apply, _pad_batch(codes, bucket),
+                            _pad_batch(xraw, bucket), dep.layers, key,
+                            return_intermediates)
         return _slice_result(out, b, return_intermediates)
 
     def _run(self, apply, codes, xraw, layers, key, return_intermediates):
@@ -717,3 +740,14 @@ class ACIMExecutor(_CachedExecutor):
 register_executor("ref", RefExecutor())
 register_executor("pallas", PallasExecutor())
 register_executor("acim", ACIMExecutor())
+
+
+def _obs_collect() -> dict:
+    """Per-backend dispatch counts under the documented labeled series."""
+    return {
+        ("runtime.backend_dispatch", (("backend", name),)): count
+        for name, count in sorted(DISPATCH_COUNTS.items())
+    }
+
+
+_OBS_REGISTRY.register_collector(_obs_collect)

@@ -208,3 +208,15 @@ class PlanCache:
 
 # The process-wide cache every executor resolves through.
 PLAN_CACHE = PlanCache()
+
+
+def _obs_collect() -> dict:
+    """Feed the cache counters to the obs registry under their documented
+    dotted names (docs/observability.md) — pulled at snapshot time, so the
+    cache's hot path pays nothing for observability."""
+    return {f"plan_cache.{k}": v for k, v in PLAN_CACHE.stats().items()}
+
+
+from ..obs import REGISTRY as _OBS_REGISTRY  # noqa: E402 - avoid cycle risk
+
+_OBS_REGISTRY.register_collector(_obs_collect)

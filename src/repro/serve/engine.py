@@ -79,6 +79,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import model as M
 from .. import runtime
+from ..obs.trace import profile_scope
 from .kvpool import KVBlockPool
 
 __all__ = ["Request", "ServeEngine", "prefill_bucketing_supported",
@@ -408,7 +409,9 @@ class ServeEngine:
         plen = len(req.prompt)
         # prefill the request alone (B=1), splice its cache into the pool
         tokens = jnp.asarray([self._padded_prompt(req.prompt)], jnp.int32)
-        with runtime.use_backend(self.kan_backend), runtime.use_mesh(self.mesh):
+        with runtime.use_backend(self.kan_backend), \
+                runtime.use_mesh(self.mesh), \
+                profile_scope("serve.prefill"):
             logits, cache1 = self._prefill_one(
                 self.params, tokens, jnp.asarray([plen - 1], jnp.int32)
             )
@@ -456,7 +459,9 @@ class ServeEngine:
         chunk = req.prompt[start:start + take] + [0] * (c - take)
         tokens = jnp.asarray([chunk], jnp.int32)
         table = jnp.asarray(self.block_tables[slot])
-        with runtime.use_backend(self.kan_backend), runtime.use_mesh(self.mesh):
+        with runtime.use_backend(self.kan_backend), \
+                runtime.use_mesh(self.mesh), \
+                profile_scope("serve.prefill_chunk"):
             logits, self.cache = self._prefill_chunk_fn(
                 self.params, self.cache, tokens, table,
                 jnp.asarray(start, jnp.int32),
@@ -502,7 +507,9 @@ class ServeEngine:
                 for s in self._prefilling:
                     tables[s] = 0
             args = (jnp.asarray(tables),)
-        with runtime.use_backend(self.kan_backend), runtime.use_mesh(self.mesh):
+        with runtime.use_backend(self.kan_backend), \
+                runtime.use_mesh(self.mesh), \
+                profile_scope("serve.decode_step"):
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(self.pos), *args,
@@ -520,7 +527,7 @@ class ServeEngine:
 
     # -- main loop --------------------------------------------------------
 
-    def run(self, requests: list, log: Callable = lambda *_: None):
+    def run(self, requests: list, log: Callable | None = None):
         """Serve a batch synchronously; returns requests in completion order.
 
         Thin driver over :class:`repro.serve.scheduler.Scheduler`: submit

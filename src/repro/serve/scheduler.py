@@ -28,7 +28,22 @@ event-driven loop over a request queue:
   * **metrics** — per-request TTFT and inter-token latencies plus
     aggregate tokens/s, queue-depth-over-time samples and admission
     counters, snapshotted by :meth:`Scheduler.stats` (see
-    ``docs/serving.md`` for the metrics glossary).
+    ``docs/serving.md`` for the metrics glossary).  With the process-wide
+    obs registry enabled (``repro.obs.enable()`` / ``REPRO_OBS=1``) the
+    same events also feed the documented dotted series (``serve.ttft_s``,
+    ``serve.completed``, ``kv.blocks_in_use``, ...; see
+    ``docs/observability.md``) — recording only, token streams are
+    bit-identical with observability on or off;
+  * **tracing** — ``Scheduler(trace=True)`` records one span tree per
+    request (``request`` > ``queued`` / ``prefill`` / ``decode`` +
+    ``first_token`` events) on the scheduler's own clock via
+    :class:`repro.obs.Tracer` (``sched.tracer``), so a ``ManualClock``
+    workload exports a byte-identical JSONL timeline run to run;
+  * **logging** — ``log=`` accepts the legacy bare callable (every line
+    forwarded, as always) or ``None`` for the structured ``repro.obs``
+    logger, where per-request chatter sits at debug level under
+    ``REPRO_LOG_LEVEL``; ``stats_interval_s=`` emits a periodic one-line
+    stats summary through it.
 
 Time comes from an injectable clock (wall ``time.perf_counter`` by
 default); :class:`ManualClock` makes arrival/deadline behavior
@@ -50,6 +65,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .. import obs
 
 __all__ = [
     "ManualClock",
@@ -157,6 +174,14 @@ def _summary(xs: list) -> dict:
     }
 
 
+# KV-pool counters mirrored into gauges each scheduling round (paged
+# engines only; names documented in docs/observability.md).
+_KV_GAUGES = (
+    "blocks_in_use", "blocks_in_use_peak", "blocks_cached", "blocks_free",
+    "prefix_hits", "prefix_misses", "allocs", "evictions",
+)
+
+
 class Scheduler:
     """Event-driven continuous batching over one :class:`ServeEngine`.
 
@@ -166,13 +191,26 @@ class Scheduler:
     """
 
     def __init__(self, engine, max_queue: int | None = None, clock=None,
-                 log: Callable | None = None):
+                 log: Callable | None = None, trace: bool = False,
+                 tracer=None, stats_interval_s: float | None = None):
         self.engine = engine
         self.max_queue = max_queue
         self._clock = clock
         self._now = clock.now if clock is not None else time.perf_counter
         self._t0 = self._now()
-        self.log = log or (lambda *_: None)
+        # bare callables keep their legacy everything-forwarded behavior;
+        # None routes through the structured process logger (info threshold,
+        # REPRO_LOG_LEVEL) where per-request chatter sits at debug level
+        self.log = obs.as_logger(log, "sched")
+        self.stats_interval_s = stats_interval_s
+        self._last_stats_line = 0.0
+        # span recorder on the scheduler's own clock: ManualClock workloads
+        # trace deterministically (byte-identical JSONL run to run)
+        self.tracer = tracer
+        if trace and self.tracer is None:
+            self.tracer = obs.Tracer(clock=self.elapsed)
+        self._spans: dict[int, dict] = {}      # ACTIVE rid -> span handles
+        self._mx = self._bind_metrics() if obs.enabled() else None
         self.queue: list = []                  # submitted, not yet admitted
         self.finished: list = []               # completion order (+ expired)
         self._on_token: dict[int, Callable] = {}
@@ -198,6 +236,29 @@ class Scheduler:
         self._depth_rounds = 0
         self._depth_sum = 0
         self._depth_max = 0
+
+    def _bind_metrics(self) -> dict:
+        """Resolve the serve.* / kv.* instruments once at construction so
+        the per-round record path is attribute access, not registry
+        lookups.  Only called when obs is enabled; ``self._mx is None``
+        otherwise and every obs block below is skipped outright."""
+        R = obs.REGISTRY
+        mx = {
+            "submitted": R.counter("serve.submitted"),
+            "completed": R.counter("serve.completed"),
+            "expired": R.counter("serve.expired"),
+            "rejected": R.counter("serve.rejected"),
+            "tokens": R.counter("serve.tokens"),
+            "decode_steps": R.counter("serve.decode_steps"),
+            "queue_depth": R.gauge("serve.queue_depth"),
+            "active": R.gauge("serve.active_slots"),
+            "prefilling": R.gauge("serve.prefilling_slots"),
+            "ttft": R.histogram("serve.ttft_s"),
+            "itl": R.histogram("serve.itl_s"),
+        }
+        for k in _KV_GAUGES:
+            mx[f"kv.{k}"] = R.gauge(f"kv.{k}")
+        return mx
 
     # -- time -------------------------------------------------------------
 
@@ -227,6 +288,8 @@ class Scheduler:
         """
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.rejected += 1
+            if self._mx is not None:
+                self._mx["rejected"].inc()
             raise QueueFull(
                 f"queue full ({len(self.queue)}/{self.max_queue}); "
                 f"request {req.rid} rejected"
@@ -235,6 +298,17 @@ class Scheduler:
         req.status = "queued"
         self.queue.append(req)
         self.submitted += 1
+        if self._mx is not None:
+            self._mx["submitted"].inc()
+        if self.tracer is not None:
+            root = self.tracer.begin(
+                "request", rid=req.rid, prompt_tokens=len(req.prompt),
+                max_new_tokens=req.max_new_tokens,
+            )
+            self._spans[req.rid] = {
+                "request": root,
+                "queued": self.tracer.begin("queued", parent=root),
+            }
         self._on_token[req.rid] = on_token
         self._on_done[req.rid] = on_done
         return req
@@ -264,6 +338,12 @@ class Scheduler:
         self._depth_rounds += 1
         self._depth_sum += depth
         self._depth_max = max(self._depth_max, depth)
+        if self._mx is not None:
+            self._sample_gauges(depth)
+        if (self.stats_interval_s is not None
+                and now - self._last_stats_line >= self.stats_interval_s):
+            self._last_stats_line = now
+            self._stats_line(now)
         if any(r is not None for r in self.engine.active):
             self._decode_round()
             progressed = True
@@ -294,11 +374,14 @@ class Scheduler:
                 r.done = True
                 r.status = "expired"
                 self.expired += 1
+                if self._mx is not None:
+                    self._mx["expired"].inc()
+                self._trace_finish(r, "expired")
                 self.finished.append(r)
                 self._finish_cb(r)
                 self._retire(r.rid)
-                self.log(f"request {r.rid} expired after "
-                         f"{now - r.arrival_s:.2f}s queued")
+                self.log.debug("request expired", rid=r.rid,
+                               queued_s=round(now - r.arrival_s, 3))
             else:
                 keep.append(r)
         self.queue = keep
@@ -321,16 +404,19 @@ class Scheduler:
                 # chunked prefill: claim the slot now, advance one chunk per
                 # round (_advance_prefills) — the first token is emitted
                 # when the prompt completes
+                self._trace_admit(req, chunked=True)
                 eng._begin_prefill(slot, req)
                 req.status = "running"
                 admitted = True
-                self.log(f"admitted request {req.rid} (chunked prefill); "
-                         f"{len(self.queue)} queued")
+                self.log.debug("admitted request", rid=req.rid,
+                               prefill="chunked", queued=len(self.queue))
                 continue
+            self._trace_admit(req, chunked=False)
             logits = eng._prefill_slot(slot, req)
             self._first_token(req, logits)
             admitted = True
-            self.log(f"admitted request {req.rid}; {len(self.queue)} queued")
+            self.log.debug("admitted request", rid=req.rid,
+                           queued=len(self.queue))
         return admitted
 
     def _advance_prefills(self) -> bool:
@@ -342,9 +428,13 @@ class Scheduler:
             req = eng._prefilling[slot]["req"]
             logits = eng._prefill_step(slot)
             progressed = True
+            if self.tracer is not None:
+                sp = self._spans.get(req.rid)
+                if sp is not None and "chunks" in sp:
+                    sp["chunks"] += 1
             if logits is not None:
                 self._first_token(req, logits)
-                self.log(f"request {req.rid} prefill complete")
+                self.log.debug("prefill complete", rid=req.rid)
         return progressed
 
     def _first_token(self, req, logits) -> None:
@@ -355,6 +445,18 @@ class Scheduler:
         req.status = "running"
         req.ttft_s = t - req.arrival_s
         self._ttfts.append(req.ttft_s)
+        if self._mx is not None:
+            self._mx["ttft"].observe(req.ttft_s)
+        if self.tracer is not None:
+            sp = self._spans.get(req.rid)
+            if sp is not None:
+                pre = sp.pop("prefill", None)
+                if pre is not None:
+                    self.tracer.end(pre, chunks=sp.pop("chunks", 0))
+                self.tracer.event("first_token", parent=sp["request"],
+                                  ttft_s=round(req.ttft_s, 9))
+                sp["decode"] = self.tracer.begin("decode",
+                                                 parent=sp["request"])
         self._rec[req.rid] = {
             "arrival": req.arrival_s, "admit": t, "token_times": [t],
         }
@@ -371,6 +473,8 @@ class Scheduler:
                 tokens[i] = r.output[-1]
         logits = eng.decode_active(tokens)
         self.decode_steps += 1
+        if self._mx is not None:
+            self._mx["decode_steps"].inc()
         # pure-greedy pools (the common case, and all of run()) take the
         # device-side argmax — transferring B ints per step, not the whole
         # (slots, vocab) logits matrix; the full rows come to host only
@@ -394,6 +498,8 @@ class Scheduler:
             rec = self._rec.setdefault(
                 r.rid, {"arrival": r.arrival_s, "admit": t, "token_times": []}
             )
+            if self._mx is not None and rec["token_times"]:
+                self._mx["itl"].observe(t - rec["token_times"][-1])
             rec["token_times"].append(t)
             self._emit(r, tok)
             if (tok == r.eos_id or len(r.output) >= r.max_new_tokens
@@ -402,12 +508,16 @@ class Scheduler:
                 r.status = "done"
                 r.latency_s = t - rec["admit"]
                 self.completed += 1
+                if self._mx is not None:
+                    self._mx["completed"].inc()
+                self._trace_finish(r, "done")
                 self.finished.append(r)
                 eng.release_slot(i)
                 self._finish_cb(r)
                 self._retire(r.rid)
-                self.log(f"request {r.rid} done ({len(r.output)} tokens, "
-                         f"{r.latency_s:.2f}s)")
+                self.log.debug("request done", rid=r.rid,
+                               tokens=len(r.output),
+                               latency_s=round(r.latency_s, 3))
 
     def _retire(self, rid: int) -> None:
         """Fold a finished request's record into the capped aggregates and
@@ -427,6 +537,8 @@ class Scheduler:
         return sample_token(logits_row, sp, req.rid, len(req.output))
 
     def _emit(self, req, tok: int) -> None:
+        if self._mx is not None:
+            self._mx["tokens"].inc()
         cb = self._on_token.get(req.rid)
         if cb is not None:
             cb(req, tok)
@@ -435,6 +547,70 @@ class Scheduler:
         cb = self._on_done.get(req.rid)
         if cb is not None:
             cb(req)
+
+    # -- obs hooks (no-ops unless tracing / metrics are enabled) -----------
+
+    def _trace_admit(self, req, chunked: bool) -> None:
+        """queued span ends, prefill span opens (admission instant)."""
+        if self.tracer is None:
+            return
+        sp = self._spans.get(req.rid)
+        if sp is None:
+            return  # submitted before tracing was attached
+        q = sp.pop("queued", None)
+        if q is not None:
+            self.tracer.end(q)
+        sp["prefill"] = self.tracer.begin("prefill", parent=sp["request"],
+                                          chunked=chunked)
+        sp["chunks"] = 0
+
+    def _trace_finish(self, req, status: str) -> None:
+        """Close the request's whole span tree (done or expired)."""
+        if self.tracer is None:
+            return
+        sp = self._spans.pop(req.rid, None)
+        if sp is None:
+            return
+        dec = sp.get("decode")
+        if dec is not None and dec.open:
+            self.tracer.end(dec, tokens=len(req.output))
+        for k in ("queued", "prefill"):
+            s = sp.get(k)
+            if s is not None and s.open:
+                self.tracer.end(s)
+        if sp["request"].open:
+            self.tracer.end(sp["request"], status=status,
+                            tokens=len(req.output))
+
+    def _sample_gauges(self, depth: int) -> None:
+        """Mirror the point-in-time pool state into the obs gauges (one
+        call per scheduling round; only reached when obs is enabled)."""
+        mx = self._mx
+        mx["queue_depth"].set(depth)
+        mx["active"].set(sum(r is not None for r in self.engine.active))
+        mx["prefilling"].set(len(self.engine.prefilling_slots()))
+        kv = self.engine.kv_stats()
+        if kv:
+            for k in _KV_GAUGES:
+                if k in kv:
+                    mx[f"kv.{k}"].set(kv[k])
+
+    def _stats_line(self, now: float) -> None:
+        """One periodic info-level summary line through the structured
+        logger (``stats_interval_s=``) — replaces ad-hoc caller lambdas."""
+        s = self.stats()
+        ttft_p50 = None if s["ttft_s"] is None else s["ttft_s"]["p50"]
+        self.log.info(
+            "stats",
+            elapsed_s=round(now, 3),
+            submitted=s["submitted"], completed=s["completed"],
+            expired=s["expired"], rejected=s["rejected"],
+            queued=s["queued"], active=s["active"],
+            tokens=s["tokens"],
+            tokens_per_s=(round(s["tokens_per_s"], 1)
+                          if s["tokens_per_s"] is not None else None),
+            ttft_p50_s=(round(ttft_p50, 4) if ttft_p50 is not None else None),
+        )
 
     # -- observability ----------------------------------------------------
 
@@ -459,6 +635,12 @@ class Scheduler:
         currently active requests' partial streams).  ``tokens_per_s``
         spans first admission to the last emitted token.  TTFT/ITL
         percentiles are over the most recent 4096 samples.
+
+        Every field is defined for every scheduler state: zero completed
+        requests never divides by zero or emits NaN (``tokens_per_s`` is
+        None until a span exists), and a workload where no request ever
+        produced a first token — e.g. everything expired in the queue —
+        reports ``ttft_s: None`` rather than an empty summary dict.
         """
         active_recs = list(self._rec.values())
         itls = list(self._itls) + [
@@ -483,7 +665,7 @@ class Scheduler:
             "kv": self.engine.kv_stats(),
             "tokens": tokens,
             "tokens_per_s": (tokens / span) if span > 0 else None,
-            "ttft_s": _summary(list(self._ttfts)),
+            "ttft_s": _summary(list(self._ttfts)) if self._ttfts else None,
             "itl_s": _summary(itls),
             "queue_depth": {
                 "samples": len(self._depth_samples),

@@ -1,0 +1,366 @@
+"""Observability layer acceptance (the PR-8 contract).
+
+Three load-bearing invariants:
+
+  * **bit-identity** — greedy token streams are unchanged by observability:
+    recording (metrics + tracing) never feeds back into execution;
+  * **determinism** — an identical workload under ``ManualClock`` exports a
+    byte-identical JSONL trace run to run, and ref/pallas backends produce
+    the same span skeleton (ids, parents, timestamps — attrs may differ);
+  * **zero-cost when off** — with the registry disabled (the default),
+    instrument record calls are no-ops and leave no series behind.
+
+Plus the mechanics: registry semantics (get-or-create, kind mismatch,
+labels, collectors, reset), Prometheus text round-trip through the strict
+parser, the /metrics HTTP server, structured-logger level filtering and
+the bare-lambda back-compat path.
+"""
+
+import json
+import urllib.request
+
+import jax
+import pytest
+
+from repro import obs
+from repro.configs.registry import smoke_config
+from repro.models.model import init_params
+from repro.obs.metrics import MetricsRegistry
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import ManualClock, Scheduler
+
+
+@pytest.fixture(scope="module")
+def kan_setup():
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def float_setup():
+    cfg = smoke_config("qwen2.5-14b")
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture
+def obs_on():
+    """Enable recording for one test; leave the process as it was found."""
+    obs.REGISTRY.reset()
+    obs.enable()
+    yield
+    obs.disable()
+    obs.REGISTRY.reset()
+
+
+def make_reqs(cfg, n=2, plen=5, max_new=3, seed=42, **kw):
+    rng = jax.random.PRNGKey(seed)
+    reqs = []
+    for rid in range(n):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
+                            **kw))
+    return reqs
+
+
+# -- metrics registry ---------------------------------------------------------
+
+
+def test_registry_instruments_and_labels(obs_on):
+    r = MetricsRegistry()
+    r.counter("c").inc()
+    r.counter("c").inc(2)
+    r.counter("d").inc(backend="pallas")
+    r.gauge("g").set(7.5)
+    r.histogram("h", edges=(1.0, 2.0, 4.0)).observe(1.5)
+    snap = r.snapshot()["metrics"]
+    assert snap["c"] == {"kind": "counter", "value": 3}
+    assert snap["d{backend=pallas}"]["value"] == 1
+    assert snap["g"]["value"] == 7.5
+    h = snap["h"]["value"]
+    # fixed edges, value 1.5 lands in the (1, 2] bucket
+    assert h["edges"] == [1.0, 2.0, 4.0]
+    assert h["counts"] == [0, 1, 0, 0] and h["count"] == 1 and h["sum"] == 1.5
+    # get-or-create: same name -> same instrument; kind mismatch refuses
+    assert r.counter("c") is r.counter("c")
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("c")
+
+
+def test_disabled_recording_is_a_noop():
+    obs.disable()
+    r = MetricsRegistry()
+    r.counter("c").inc()
+    r.gauge("g").set(1.0)
+    r.histogram("h").observe(0.5)
+    assert r.snapshot()["metrics"] == {}
+    # a bound label view is equally inert
+    r.counter("c").labels(backend="ref").inc()
+    assert r.snapshot()["metrics"] == {}
+
+
+def test_histogram_rejects_unsorted_edges(obs_on):
+    with pytest.raises(ValueError, match="strictly increase"):
+        MetricsRegistry().histogram("h", edges=(2.0, 1.0))
+
+
+def test_collectors_feed_snapshots_and_survive_reset(obs_on):
+    r = MetricsRegistry()
+    fn = lambda: {"pool.depth": 4,
+                  ("disp.count", (("backend", "ref"),)): 9}
+    r.register_collector(fn)
+    snap = r.snapshot()["metrics"]
+    assert snap["pool.depth"] == {"kind": "gauge", "value": 4}
+    assert snap["disp.count{backend=ref}"]["value"] == 9
+    r.reset()  # collectors survive a plain reset (import-time registrations)
+    assert r.snapshot()["metrics"]["pool.depth"]["value"] == 4
+    r.unregister_collector(fn)
+    assert r.snapshot()["metrics"] == {}
+
+
+def test_plan_cache_collector_registered_on_global_registry(obs_on):
+    snap = obs.REGISTRY.snapshot()["metrics"]
+    for k in ("plan_cache.hits", "plan_cache.misses", "plan_cache.traces"):
+        assert k in snap and snap[k]["kind"] == "gauge"
+
+
+# -- exposition ---------------------------------------------------------------
+
+
+def test_prometheus_text_round_trips_strict_parser(obs_on):
+    r = MetricsRegistry()
+    r.counter("serve.tokens").inc(12)
+    r.counter("runtime.backend_dispatch").inc(3, backend="pallas")
+    r.histogram("serve.ttft_s", edges=(0.1, 1.0)).observe(0.05)
+    r.histogram("serve.ttft_s", edges=(0.1, 1.0)).observe(5.0)
+    text = obs.prometheus_text(r)
+    parsed = obs.parse_prometheus_text(text)
+    assert parsed["serve_tokens"] == 12
+    assert parsed['runtime_backend_dispatch{backend="pallas"}'] == 3
+    # cumulative buckets: 0.05 <= 0.1; 5.0 overflows to +Inf only
+    assert parsed['serve_ttft_s_bucket{le="0.1"}'] == 1
+    assert parsed['serve_ttft_s_bucket{le="1"}'] == 1
+    assert parsed['serve_ttft_s_bucket{le="+Inf"}'] == 2
+    assert parsed["serve_ttft_s_count"] == 2
+    assert parsed["serve_ttft_s_sum"] == pytest.approx(5.05)
+    with pytest.raises(ValueError, match="not a valid prometheus sample"):
+        obs.parse_prometheus_text("this is { not a sample\n")
+
+
+def test_dump_metrics_json_and_prom(tmp_path, obs_on):
+    obs.REGISTRY.counter("serve.tokens").inc(5)
+    pj, pp = tmp_path / "m.json", tmp_path / "m.prom"
+    obs.dump_metrics(pj)
+    obs.dump_metrics(pp)
+    assert json.loads(pj.read_text())["metrics"]["serve.tokens"]["value"] == 5
+    assert obs.parse_prometheus_text(pp.read_text())["serve_tokens"] == 5
+
+
+def test_metrics_http_server_serves_both_formats(obs_on):
+    obs.REGISTRY.counter("serve.tokens").inc(7)
+    srv = obs.start_metrics_server(0)  # ephemeral port
+    try:
+        base = f"http://127.0.0.1:{srv.server_port}"
+        text = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert obs.parse_prometheus_text(text)["serve_tokens"] == 7
+        snap = json.loads(
+            urllib.request.urlopen(f"{base}/metrics.json").read())
+        assert snap["metrics"]["serve.tokens"]["value"] == 7
+    finally:
+        srv.shutdown()
+
+
+# -- structured logging -------------------------------------------------------
+
+
+def test_logger_level_filtering_and_formatting(monkeypatch):
+    lines = []
+    lg = obs.Logger("sched", sink=lines.append, level="info")
+    lg.debug("dropped", rid=1)
+    lg.info("request done", rid=3, latency_s=0.0421)
+    lg.warning("backpressure", queued=4)
+    assert lines == [
+        "sched: request done rid=3 latency_s=0.0421",
+        "sched: [warning] backpressure queued=4",
+    ]
+    # level=None re-reads REPRO_LOG_LEVEL per record
+    lines.clear()
+    envlg = obs.Logger("s", sink=lines.append)
+    monkeypatch.setenv(obs.ENV_LOG_LEVEL_VAR, "error")
+    envlg.info("hidden")
+    monkeypatch.setenv(obs.ENV_LOG_LEVEL_VAR, "debug")
+    envlg.debug("shown")
+    assert lines == ["s: [debug] shown"]
+
+
+def test_as_logger_back_compat_paths():
+    # bare callable: DEBUG threshold, every record forwarded (legacy log=)
+    got = []
+    lg = obs.as_logger(got.append)
+    lg.debug("admitted request", rid=0)
+    lg("request done", rid=0)        # __call__ keeps the old lambda shape
+    assert got == ["[debug] admitted request rid=0", "request done rid=0"]
+    # None -> the named process logger; Logger -> itself
+    assert obs.as_logger(None, "x") is obs.get_logger("x")
+    assert obs.as_logger(lg) is lg
+    with pytest.raises(TypeError):
+        obs.as_logger(42)
+
+
+# -- tracer -------------------------------------------------------------------
+
+
+def test_tracer_records_events_spans_and_trims():
+    clk = ManualClock()
+    tr = obs.Tracer(clock=clk.now, max_records=3)
+    root = tr.begin("request", rid=5)
+    clk.advance(1.0)
+    tr.event("first_token", parent=root)
+    child = tr.begin("decode", parent=root)
+    clk.advance(0.5)
+    tr.end(child, tokens=2)
+    tr.end(root, status="done")
+    with pytest.raises(ValueError, match="already ended"):
+        tr.end(root)
+    recs = tr.records()
+    assert len(recs) == 3 and tr.dropped == 0
+    assert [r["id"] for r in recs] == [0, 1, 2]  # sequence-number ids
+    ev = next(r for r in recs if r["type"] == "event")
+    assert ev["rid"] == 5 and ev["t0"] == 1.0  # rid inherits from parent
+    # past the cap the oldest CLOSED record is dropped; export notes it
+    tr.event("extra")
+    assert tr.dropped == 1
+    assert [r["name"] for r in tr.records()] == [
+        "first_token", "decode", "extra"]
+
+
+def _serve_traced(params, cfg, backend, path):
+    """One deterministic 2-request workload (one future arrival) under
+    ManualClock, traced; exports JSONL to ``path`` and returns outputs."""
+    clock = ManualClock()
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                      kan_backend=backend)
+    sched = Scheduler(eng, clock=clock, trace=True)
+    reqs = make_reqs(cfg, n=2, max_new=3)
+    reqs[1].arrival_s = 2.5
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_idle()
+    sched.tracer.export_jsonl(path)
+    return {r.rid: r.output for r in sched.finished}, sched
+
+
+def test_trace_jsonl_byte_identical_across_runs(kan_setup, tmp_path):
+    cfg, params = kan_setup
+    out1, _ = _serve_traced(params, cfg, "pallas", tmp_path / "a.jsonl")
+    out2, _ = _serve_traced(params, cfg, "pallas", tmp_path / "b.jsonl")
+    assert out1 == out2
+    a, b = (tmp_path / "a.jsonl").read_bytes(), \
+        (tmp_path / "b.jsonl").read_bytes()
+    assert a == b and a  # identical and non-empty
+
+
+def test_trace_skeleton_identical_across_backends(kan_setup, tmp_path):
+    """ref and pallas serve the same schedule -> same span tree (ids,
+    parents, rids, ManualClock timestamps); attrs are allowed to differ."""
+    cfg, params = kan_setup
+    out_r, sch_r = _serve_traced(params, cfg, "ref", tmp_path / "r.jsonl")
+    out_p, sch_p = _serve_traced(params, cfg, "pallas", tmp_path / "p.jsonl")
+    assert out_r == out_p                  # greedy bit-identity, per PR-5
+    sk_r, sk_p = sch_r.tracer.skeleton(), sch_p.tracer.skeleton()
+    assert sk_r == sk_p and len(sk_r) > 0
+
+
+def test_trace_span_taxonomy_complete_timeline(float_setup):
+    """A served request leaves the full documented span tree: request >
+    queued/prefill/decode spans (all closed) + a first_token event."""
+    cfg, params = float_setup
+    clock = ManualClock()
+    eng = ServeEngine(params, cfg, slots=2, max_len=32)
+    sched = Scheduler(eng, clock=clock, trace=True)
+    for r in make_reqs(cfg, n=1, max_new=3):
+        sched.submit(r)
+    sched.run_until_idle()
+    recs = sched.tracer.records()
+    by_name = {}
+    for r in recs:
+        by_name.setdefault(r["name"], []).append(r)
+    for name in ("request", "queued", "prefill", "decode"):
+        (span,) = by_name[name]
+        assert span["type"] == "span" and span["t1"] is not None
+        assert span["rid"] == 0
+    (ft,) = by_name["first_token"]
+    assert ft["type"] == "event" and ft["parent"] == by_name["request"][0]["id"]
+    assert by_name["request"][0]["attrs"]["status"] == "done"
+    assert by_name["decode"][0]["attrs"]["tokens"] == 3
+    # expired-while-queued requests close their tree too
+    sched2 = Scheduler(ServeEngine(params, cfg, slots=1, max_len=32),
+                       clock=clock, trace=True)
+    (rq,) = make_reqs(cfg, n=1)
+    rq.deadline_s = 0.5
+    sched2.submit(rq)
+    clock.advance(1.0)
+    sched2.step()
+    (root,) = [r for r in sched2.tracer.records() if r["name"] == "request"]
+    assert root["attrs"]["status"] == "expired" and root["t1"] is not None
+
+
+def test_chrome_export_shape(float_setup, tmp_path):
+    cfg, params = float_setup
+    clock = ManualClock()
+    eng = ServeEngine(params, cfg, slots=2, max_len=32)
+    sched = Scheduler(eng, clock=clock, trace=True)
+    for r in make_reqs(cfg, n=1, max_new=2):
+        sched.submit(r)
+    sched.run_until_idle()
+    path = tmp_path / "t.json"
+    sched.tracer.export_chrome(path)
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} <= {"X", "i"}
+    assert all(e["tid"] == 0 for e in evs)  # one timeline row per request
+
+
+# -- end-to-end: bit-identity + metrics coverage ------------------------------
+
+
+def test_greedy_streams_bit_identical_with_obs_enabled(float_setup):
+    """The headline acceptance: observability on (metrics + tracing) must
+    not change a single emitted token."""
+    cfg, params = float_setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=32)
+    baseline = {r.rid: r.output for r in eng.run(make_reqs(cfg))}
+    obs.enable()
+    try:
+        eng2 = ServeEngine(params, cfg, slots=2, max_len=32)
+        sched = Scheduler(eng2, trace=True)
+        for r in make_reqs(cfg):
+            sched.submit(r)
+        sched.run_until_idle()
+        assert {r.rid: r.output for r in sched.finished} == baseline
+    finally:
+        obs.disable()
+        obs.REGISTRY.reset()
+
+
+def test_served_workload_covers_documented_metric_names(kan_setup, obs_on):
+    """A served request on a paged KAN engine populates the documented
+    dotted names across all three subsystems (the acceptance snapshot)."""
+    cfg, params = kan_setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                      kan_backend="ref", kv_block_size=8)
+    sched = Scheduler(eng)
+    for r in make_reqs(cfg, n=2, max_new=2):
+        sched.submit(r)
+    sched.run_until_idle()
+    snap = obs.REGISTRY.snapshot()["metrics"]
+    assert snap["serve.submitted"]["value"] == 2
+    assert snap["serve.completed"]["value"] == 2
+    assert snap["serve.tokens"]["value"] == sched.stats()["tokens"]
+    assert snap["serve.ttft_s"]["kind"] == "histogram"
+    assert snap["serve.ttft_s"]["value"]["count"] == 2
+    assert "kv.blocks_in_use" in snap and "kv.prefix_hits" in snap
+    assert "plan_cache.hits" in snap
+    assert snap["runtime.backend_dispatch{backend=ref}"]["value"] > 0
+    # and the whole snapshot survives strict Prometheus exposition
+    obs.parse_prometheus_text(obs.prometheus_text())

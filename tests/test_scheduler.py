@@ -278,6 +278,44 @@ def test_long_lived_scheduler_memory_stays_bounded(float_setup):
     eng.pool.check_consistent()
 
 
+def test_stats_snapshot_safe_with_zero_requests(float_setup):
+    """stats() on a fresh scheduler: every field defined, no div-zero, no
+    NaN anywhere (the snapshot must stay strict-JSON serializable)."""
+    import json
+
+    cfg, params = float_setup
+    sched = Scheduler(ServeEngine(params, cfg, slots=2, max_len=32))
+    s = sched.stats()
+    assert s["submitted"] == 0 and s["completed"] == 0
+    assert s["tokens"] == 0 and s["tokens_per_s"] is None
+    assert s["ttft_s"] is None
+    assert s["itl_s"] == {"n": 0, "mean": None, "p50": None, "p95": None}
+    assert s["queue_depth"]["mean"] == 0.0
+    json.dumps(s, allow_nan=False)  # raises on any NaN/Inf
+
+
+def test_stats_expired_only_workload_reports_null_ttft(float_setup):
+    """Every request expires in the queue (no first token ever): ttft_s is
+    None — not an empty summary, not garbage — and nothing divides by
+    zero."""
+    import json
+
+    cfg, params = float_setup
+    clock = ManualClock()
+    sched = Scheduler(ServeEngine(params, cfg, slots=1, max_len=32),
+                      clock=clock)
+    for r in make_reqs(cfg, n=2):
+        r.deadline_s = 0.5
+        sched.submit(r)
+    clock.advance(1.0)      # both deadlines lapse before any admission
+    sched.step()
+    s = sched.stats()
+    assert s["expired"] == 2 and s["completed"] == 0
+    assert s["ttft_s"] is None and s["tokens_per_s"] is None
+    assert s["tokens"] == 0
+    json.dumps(s, allow_nan=False)
+
+
 def test_request_defaults_keep_old_call_sites_working():
     """Pre-scheduler construction (rid/prompt/max_new_tokens only) must keep
     working: arrival 'now', no deadline, greedy."""
