@@ -25,7 +25,11 @@ shared-prefix/unique workload per runtime backend on the paged-KV engine
 (block pool + prefix cache + chunked prefill), plus contiguous-slab and
 prefix-cache-off comparison legs, recording TTFT p50/p95, inter-token
 latency, tokens/s, queue-depth trace and the KV pool's hit-rate /
-peak-blocks counters (the docs/serving.md metrics glossary).  An ATTENTION
+peak-blocks counters (the docs/serving.md metrics glossary).  Speculative
+legs rerun the paged schedule per backend with ``spec_decode=2`` (a cheap
+halved-grid KAN drafter + one-pass batched verify; greedy streams stay
+bit-identical), recording accept rate, tokens-per-round and draft/verify
+p50 next to the spec-off baselines.  An ATTENTION
 section times the decode step per attention backend ("ref" chunked XLA vs
 "flash" fused Pallas) on the KAN-deployed engine — with "flash" every
 FLOP-heavy op of the step is a fused kernel — plus a prefill-shape SDPA
@@ -222,6 +226,11 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         # so a single full-chunk + partial-chunk warm prompt covers them.
         if engine.paged:
             warm_lens = {BS + 1, 2}
+            if getattr(engine, "spec_k", 0):
+                # the drafter prefills whole prompts through bucketed pads
+                # (not chunks) — warm every bucket the schedule hits, or
+                # its compiles land inside the measured window
+                warm_lens |= {len(p) for p in prompts}
         else:
             warm_lens = {len(engine._padded_prompt([3] * len(p)))
                          for p in prompts}
@@ -246,6 +255,7 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         sched.run_until_idle()
         s = sched.stats()
         kv = s["kv"]
+        sp = s["spec"]
         pc1 = runtime.cache_stats()
         row = {
             **label,
@@ -269,6 +279,14 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
             "kv_blocks_cached": None if kv is None else kv["blocks_cached"],
             "kv_evictions": None if kv is None else kv["evictions"],
             "kv_allocs": None if kv is None else kv["allocs"],
+            # speculative-decode leg fields (spec_k=0 rows: the baseline)
+            "spec_k": 0 if sp is None else sp["k"],
+            "tokens_per_round": s["tokens_per_round"],
+            "accept_rate": None if sp is None else sp["accept_rate"],
+            "draft_ms": (None if sp is None or sp["draft_s"]["p50"] is None
+                         else sp["draft_s"]["p50"] * 1e3),
+            "verify_ms": (None if sp is None or sp["verify_s"]["p50"] is None
+                          else sp["verify_s"]["p50"] * 1e3),
             "plan_cache": {k: pc1[k] - pc0[k]
                            for k in ("hits", "misses", "traces")},
             "backend_dispatch": {
@@ -279,6 +297,7 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         }
         print_fn(
             f"sustained,backend={row['backend']},kv={row['kv']},"
+            f"spec_k={row['spec_k']},"
             f"tokens={row['tokens']},tokens_per_s={row['tokens_per_s']:.1f},"
             f"ttft_p50_ms={row['ttft_p50_s'] * 1e3:.1f},"
             f"ttft_p95_ms={row['ttft_p95_s'] * 1e3:.1f},"
@@ -286,15 +305,30 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
             + ("" if kv is None else
                f",hit_rate={row['prefix_hit_rate']:.2f},"
                f"kv_peak={row['kv_blocks_in_use_peak']}")
+            + ("" if sp is None or row["accept_rate"] is None else
+               f",accept_rate={row['accept_rate']:.2f},"
+               f"tok_per_round={row['tokens_per_round']:.2f}")
         )
         return row
 
     paged_kw = dict(kv_block_size=BS, kv_blocks=KV_BLOCKS, prefill_chunk=BS)
+    SPEC_K = 2  # speculative legs: k drafted tokens per slot per round
     rows = []
     for backend in ("ref", "pallas", "acim"):
         engine = ServeEngine(params, cfg, slots=2, max_len=64,
                              kan_deploy=True, kan_backend=backend,
                              prefix_cache=True, **paged_kw)
+        rows.append(serve_one(engine, {"backend": backend,
+                                       "kv": "paged_cache"}))
+    # speculative-decode legs: same schedule, same paged engine, a cheap
+    # KAN drafter (default halved grid) proposing SPEC_K tokens per round
+    # with one batched verify pass — greedy streams stay bit-identical, so
+    # tokens/tokens_per_s compare directly against the spec_k=0 rows above
+    for backend in ("ref", "pallas", "acim"):
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             kan_deploy=True, kan_backend=backend,
+                             prefix_cache=True, spec_decode=SPEC_K,
+                             **paged_kw)
         rows.append(serve_one(engine, {"backend": backend,
                                        "kv": "paged_cache"}))
     # what did the pool / the prefix cache each buy? — same schedule on the
@@ -308,7 +342,8 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
 
     def _pallas(kv_mode):
         return next(r for r in rows
-                    if r["backend"] == "pallas" and r["kv"] == kv_mode)
+                    if r["backend"] == "pallas" and r["kv"] == kv_mode
+                    and r["spec_k"] == 0)
 
     summary = {  # the cache-on-vs-off headline (acceptance: on <= off p95)
         "ttft_p95_contiguous_s": _pallas("contiguous")["ttft_p95_s"],
@@ -323,6 +358,35 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         f"ttft_p95_cache_ms={summary['ttft_p95_paged_cache_s'] * 1e3:.1f},"
         f"hit_rate={summary['prefix_hit_rate']:.2f}"
     )
+
+    def _leg(backend, spec_k):
+        return next(r for r in rows
+                    if r["backend"] == backend and r["kv"] == "paged_cache"
+                    and r["spec_k"] == spec_k)
+
+    spec_summary = {  # the spec-on-vs-off headline per backend
+        "k": SPEC_K,
+        "per_backend": {
+            b: {
+                "tokens_per_s_off": _leg(b, 0)["tokens_per_s"],
+                "tokens_per_s_on": _leg(b, SPEC_K)["tokens_per_s"],
+                "accept_rate": _leg(b, SPEC_K)["accept_rate"],
+                "tokens_per_round": _leg(b, SPEC_K)["tokens_per_round"],
+                "draft_ms": _leg(b, SPEC_K)["draft_ms"],
+                "verify_ms": _leg(b, SPEC_K)["verify_ms"],
+            }
+            for b in ("ref", "pallas", "acim")
+        },
+    }
+    for b, d in spec_summary["per_backend"].items():
+        print_fn(
+            f"sustained,spec_summary,backend={b},k={SPEC_K},"
+            f"tok_s_off={d['tokens_per_s_off']:.1f},"
+            f"tok_s_on={d['tokens_per_s_on']:.1f},"
+            + (f"accept_rate={d['accept_rate']:.2f},"
+               if d["accept_rate"] is not None else "accept_rate=n/a,")
+            + f"tok_per_round={d['tokens_per_round']:.2f}"
+        )
     return {
         "arch": "qwen2.5-14b-kanffn",
         "slots": 2,
@@ -338,8 +402,10 @@ def _bench_sustained(requests: int, max_new: int, print_fn=print,
         "kv_block_size": BS,
         "kv_blocks": KV_BLOCKS,
         "prefill_chunk": BS,
+        "spec_k": SPEC_K,
         "rows": rows,
         "kv_summary": summary,
+        "spec_summary": spec_summary,
     }
 
 

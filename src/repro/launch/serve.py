@@ -23,6 +23,11 @@
     # greedy streams stay bit-identical to the contiguous slab):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --kv-block-size 16 --prefix-cache on --prefill-chunk 32
+    # speculative decoding: a cheap refit KAN drafter proposes 4 tokens per
+    # round, one batched target pass verifies them (streams bit-identical):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --kan-ffn --kv-block-size 16 --spec-decode 4 \
+        --draft-spec grid=4,bits=6
     # observability: metrics registry + request tracing (docs/observability.md)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
         --metrics-dump metrics.prom --metrics-dump metrics.json \
@@ -119,6 +124,20 @@ def main():
              "the block pool a plain allocator",
     )
     ap.add_argument(
+        "--spec-decode", type=int, default=0, metavar="K",
+        help="speculative decoding: a cheap refit KAN drafter proposes K "
+             "tokens per round and the target verifies all K+1 positions "
+             "in one batched forward; greedy streams stay bit-identical "
+             "(requires --kan-ffn and --kv-block-size); 0 = off",
+    )
+    ap.add_argument(
+        "--draft-spec", default=None, metavar="SPEC",
+        help="with --spec-decode: the drafter's deployment point, e.g. "
+             "'grid=4,order=2,bits=6,backend=ref' (any subset of keys; "
+             "defaults: half the target grid, same order/bits, engine "
+             "backend)",
+    )
+    ap.add_argument(
         "--prefill-chunk", type=int, default=None, metavar="TOKENS",
         help="with --kv-block-size: prefill long prompts this many tokens "
              "per scheduling round, interleaved with pooled decode, so one "
@@ -197,12 +216,26 @@ def main():
         mesh = parse_mesh_spec(args.mesh)
     if args.prefill_chunk is not None and args.kv_block_size is None:
         raise SystemExit("--prefill-chunk requires --kv-block-size")
+    if args.spec_decode:
+        if not args.kan_ffn:
+            raise SystemExit("--spec-decode requires --kan-ffn (the drafter "
+                             "is refit from the deployed KAN-FFN weights)")
+        if args.kv_block_size is None:
+            raise SystemExit("--spec-decode requires --kv-block-size "
+                             "(draft rollback releases pool blocks)")
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=128,
                          kan_deploy=args.kan_ffn, kan_backend=args.backend,
                          attn_backend=args.attn_backend, mesh=mesh,
                          kv_block_size=args.kv_block_size,
                          prefix_cache=args.prefix_cache == "on",
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         spec_decode=args.spec_decode,
+                         draft_spec=args.draft_spec)
+    if engine.draft is not None:
+        d = engine.draft.describe()
+        log.info("spec decode", k=engine.spec_k, draft_grid=d["kan_grid"],
+                 draft_order=d["kan_order"], draft_bits=d["kan_n_bits"],
+                 draft_backend=d["kan_backend"] or "inherit")
     if engine.paged:
         kv = engine.kv_stats()
         log.info("paged kv", blocks=kv["num_blocks"],
@@ -272,7 +305,7 @@ def main():
     log.info("served", requests=len(served), tokens=total,
              tokens_per_s=round(total / wall, 1), rejected=dropped)
     log.info("compiles", prefill=stats["prefill_traces"],
-             decode=stats["decode_traces"],
+             decode=stats["decode_traces"], verify=stats["verify_traces"],
              kan_plan_cache=stats["plan_cache"])
     # shutdown metrics summary (the docs/serving.md glossary)
     s = sched.stats()
@@ -294,7 +327,19 @@ def main():
         log.info("kv pool", hit_rate=round(kv["prefix_hit_rate"], 2),
                  hits=kv["prefix_hits"], misses=kv["prefix_misses"],
                  in_use=kv["blocks_in_use"], cached=kv["blocks_cached"],
-                 free=kv["blocks_free"], evictions=kv["evictions"])
+                 free=kv["blocks_free"], evictions=kv["evictions"],
+                 truncations=kv["truncations"])
+    if s["spec"] is not None:
+        sp = s["spec"]
+        log.info("spec decode", k=sp["k"], rounds=sp["rounds"],
+                 drafted=sp["drafted"], accepted=sp["accepted"],
+                 accept_rate=(round(sp["accept_rate"], 3)
+                              if sp["accept_rate"] is not None else None),
+                 draft_p50=_ms(sp["draft_s"]["p50"]),
+                 verify_p50=_ms(sp["verify_s"]["p50"]),
+                 tokens_per_round=(round(s["tokens_per_round"], 2)
+                                   if s["tokens_per_round"] is not None
+                                   else None))
     if mesh is not None:
         from .. import runtime
 

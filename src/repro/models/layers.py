@@ -302,7 +302,12 @@ def attention(p, x, cfg: ModelConfig, kind: str, positions=None, enc_out=None):
 
 
 def _sdpa_batch_masked(q, k, v, mask, cfg: ModelConfig):
-    """Decode-path attention with a per-batch (B, T) key mask."""
+    """Decode-path attention with a per-batch key mask.
+
+    mask: (B, T) — one key-validity row shared by every query (the classic
+    single-token decode step) — or (B, S, T) — one row per query, as the
+    speculative-decode verify pass needs (each of the S verified positions
+    has its own causal frontier)."""
     b, s, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
@@ -310,9 +315,13 @@ def _sdpa_batch_masked(q, k, v, mask, cfg: ModelConfig):
     logits = jnp.einsum("bshgd,bthd->bhgst", qr, k.astype(jnp.float32))
     logits = logits / math.sqrt(d)
     logits = softcap(logits, cfg.attn_logit_softcap)
-    probs = _masked_softmax(
-        logits, None if mask is None else mask[:, None, None, None, :]
-    )
+    if mask is None:
+        m = None
+    elif mask.ndim == 3:
+        m = mask[:, None, None, :, :]          # (B,1,1,S,T)
+    else:
+        m = mask[:, None, None, None, :]       # (B,1,1,1,T)
+    probs = _masked_softmax(logits, m)
     out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
     return out.reshape(b, s, hq, d)
 
@@ -321,15 +330,18 @@ def _sdpa_decode(q, k, v, cfg: ModelConfig, kind: str, qpos, kpos,
                  backend=None):
     """Decode-step attention built from per-batch positions.
 
-    q: (B,1,Hq,D); k/v: (B,T,Hkv,D); qpos: (B,1) current position; kpos:
-    (B,T) absolute position held by each cache slot, -1 for unwritten
-    slots.  ``qpos``/``kpos`` None means bidirectional over the whole cache
-    (cross-attention decode).  Dispatches like :func:`_sdpa`: the "ref"
-    backend materializes the (B,T) mask, "flash" hands the positions to the
-    fused kernel.  Both mask non-causal AND unwritten (kpos < 0) slots;
-    for the rolling-window cache causal + validity is the complete window
-    predicate, because the buffer only ever holds the last ``window``
-    positions."""
+    q: (B,S,Hq,D) — S=1 for the classic single-token step, S=k+1 for the
+    speculative-decode verify pass; k/v: (B,T,Hkv,D); qpos: (B,S) absolute
+    query positions; kpos: (B,T) absolute position held by each cache slot,
+    -1 for unwritten slots.  ``qpos``/``kpos`` None means bidirectional
+    over the whole cache (cross-attention decode).  Dispatches like
+    :func:`_sdpa`: the "ref" backend materializes the mask ((B,T) at S=1 —
+    unchanged from the single-token step — or (B,S,T) per query row),
+    "flash" hands the positions to the fused kernel, which already builds
+    its causal mask per (B,S) query row.  Both mask non-causal AND
+    unwritten (kpos < 0) slots; for the rolling-window cache causal +
+    validity is the complete window predicate, because the buffer only
+    ever holds the last ``window`` positions."""
     from ..runtime.attention import resolve_attn_backend
 
     if resolve_attn_backend(backend) == "flash":
@@ -339,66 +351,85 @@ def _sdpa_decode(q, k, v, cfg: ModelConfig, kind: str, qpos, kpos,
         return _sdpa_flash(q, k, v, cfg, fkind, qpos, kpos)
     mask = None
     if kind not in ("bidir", "cross"):
-        mask = (kpos >= 0) & (kpos <= qpos)
+        if qpos.shape[1] == 1:
+            mask = (kpos >= 0) & (kpos <= qpos)                    # (B,T)
+        else:
+            mask = ((kpos[:, None, :] >= 0)
+                    & (kpos[:, None, :] <= qpos[:, :, None]))      # (B,S,T)
     return _sdpa_batch_masked(q, k, v, mask, cfg)
 
 
 def attention_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, enc_out=None,
                      block_table=None):
-    """One-token decode.  x: (B, 1, D); cache: {"k","v"}: (B, T, Hkv, D);
-    pos: (B,) int32 current position.  Returns (out, new_cache).
+    """Decode-step attention.  x: (B, S, D) — S=1 for the classic
+    one-token step, S=k+1 for the speculative-decode verify pass, whose
+    tokens occupy consecutive positions pos..pos+S-1; cache: {"k","v"}:
+    (B, T, Hkv, D); pos: (B,) int32 current position.  Returns
+    (out, new_cache).
 
     With ``block_table`` ((B, nblk) int32) the cache is the PAGED pool —
     {"k","v"}: (NB, block_size, Hkv, D), no batch dim — and the table maps
     each request's logical block j to pool block id ``block_table[b, j]``.
-    The step scatters the new K/V into the owning pool block and gathers
+    The step scatters the new K/V into the owning pool blocks and gathers
     the table into a (B, nblk*block_size, Hkv, D) view, which is exactly
     the contiguous cache's shape and, at every VALID position, its values —
-    stale lanes (unwritten tail blocks point at the scratch block) are
-    masked by the same ``kpos <= qpos`` predicate and contribute exact
-    zeros (see ``_masked_softmax``), so paged decode is bit-identical to
-    contiguous decode.  Only "global" attention pages (the engine gates on
-    pure-global decoders)."""
+    stale lanes (unwritten tail blocks point at the scratch block, and
+    rolled-back speculative rows are rewritten before any query may attend
+    them) are masked by the ``kpos <= qpos`` predicate and contribute
+    exact zeros (see ``_masked_softmax``), so paged decode is
+    bit-identical to contiguous decode.  Positions at or beyond the
+    table's coverage are routed to pool id NB and dropped (``mode="drop"``,
+    the same idiom as :func:`paged_prefill_update`); the caller caps
+    emission before those rows could ever be consumed.  Only "global"
+    attention pages (the engine gates on pure-global decoders)."""
     b = x.shape[0]
+    s = x.shape[1]
     if kind == "cross":
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
         k, v = cache["k"], cache["v"]  # precomputed from enc_out
         out = _sdpa_decode(q, k, v, cfg, "cross", None, None)
         return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
 
-    positions = pos[:, None]
+    positions = pos[:, None] + jnp.arange(s)[None, :]  # (B, S)
     q, k, v = _qkv(p, x, cfg, True, positions)
     if block_table is not None:
         bs = cache["k"].shape[1]
         nblk = block_table.shape[1]
+        nb = cache["k"].shape[0]
         bidx = jnp.arange(b)
-        blk = block_table[bidx, pos // bs]            # (B,) pool block ids
-        off = pos % bs
+        pb = jnp.clip(positions // bs, 0, nblk - 1)
+        blk = jnp.where(positions < nblk * bs,
+                        block_table[bidx[:, None], pb], nb)  # (B,S) pool ids
+        off = positions % bs
         # retired slots all map to the scratch block; duplicate (blk, off)
         # targets race there, which is harmless — scratch lanes are never
         # unmasked for any live request
-        ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+        ck = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype),
+                                         mode="drop")
+        cv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype),
+                                         mode="drop")
         gk = ck[block_table].reshape(b, nblk * bs, *ck.shape[2:])
         gv = cv[block_table].reshape(b, nblk * bs, *cv.shape[2:])
         kpos = jnp.broadcast_to(jnp.arange(nblk * bs)[None, :],
                                 (b, nblk * bs))
-        out = _sdpa_decode(q, gk, gv, cfg, kind, pos[:, None], kpos)
+        out = _sdpa_decode(q, gk, gv, cfg, kind, positions, kpos)
         return (jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
                 {"k": ck, "v": cv})
     t = cache["k"].shape[1]
     if kind == "local" and 0 < cfg.window_size <= t:
-        # rolling window cache: slot = pos % window (t == window)
+        # rolling window cache: slot = pos % window (t == window).
+        # Single-token only — the serve engine never routes multi-token
+        # verify through local layers (paged mode gates on pure-global).
         slot = (pos % t)[:, None]
         ck = _scatter_time(cache["k"], k, slot)
         cv = _scatter_time(cache["v"], v, slot)
         kpos = _window_positions(pos, t, t)  # absolute pos held by each slot
     else:
-        ck = _scatter_time(cache["k"], k, pos[:, None])
-        cv = _scatter_time(cache["v"], v, pos[:, None])
+        ck = _scatter_time(cache["k"], k, positions)
+        cv = _scatter_time(cache["v"], v, positions)
         kpos = jnp.broadcast_to(jnp.arange(ck.shape[1])[None, :],
                                 (b, ck.shape[1]))
-    out = _sdpa_decode(q, ck, cv, cfg, kind, pos[:, None], kpos)
+    out = _sdpa_decode(q, ck, cv, cfg, kind, positions, kpos)
     new_cache = {"k": ck, "v": cv}
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 

@@ -197,6 +197,23 @@ def decode_step(p, cache, token, pos, cfg: ModelConfig, block_table=None):
     return _lm_logits(p, h, cfg)[:, 0], cache
 
 
+def verify_step(p, cache, tokens, pos, cfg: ModelConfig, block_table):
+    """Speculative-decode verify pass: score S consecutive tokens in one
+    batched forward.  tokens: (B, S) int32 — row i holds the last emitted
+    token followed by that slot's S-1 draft tokens, occupying positions
+    pos[i]..pos[i]+S-1; pos: (B,) int32.  Returns (logits (B, S, V),
+    cache).  Row j of the logits is the target's next-token distribution
+    after tokens[:, :j+1] — exactly what ``decode_step`` would have
+    produced token-by-token (attention over a causal frontier per row,
+    same paged scatter-then-gather), so greedy acceptance against these
+    rows is bit-identical to the sequential baseline."""
+    h = _embed_tokens(p, tokens, cfg)
+    h, cache = stack_decode(p["decoder"], cache, h, pos, cfg,
+                            block_table=block_table)
+    h = L.rmsnorm(p["final_norm"], h, cfg.norm_eps)
+    return _lm_logits(p, h, cfg), cache
+
+
 def init_paged_cache(p, cfg: ModelConfig, num_blocks: int, block_size: int):
     """Paged KV pool shared by every slot (see serve.kvpool); pure
     global-attention decoders only."""

@@ -3,7 +3,9 @@
 :mod:`repro.serve.engine` owns the state (slot pool, KV cache, compiled
 prefill/decode); :mod:`repro.serve.scheduler` owns the event loop
 (arrivals, admission/backpressure, deadlines, streaming callbacks, seeded
-sampling, TTFT/throughput metrics).  See ``docs/serving.md``.
+sampling, TTFT/throughput metrics); :mod:`repro.serve.spec` owns the
+speculative-decode drafter (refit KAN draft model + k-token propose).
+See ``docs/serving.md``.
 """
 
 from .engine import Request, ServeEngine, prefill_bucketing_supported
@@ -14,8 +16,11 @@ from .scheduler import (
     Scheduler,
     sample_token,
 )
+from .spec import DraftModel, DraftSpec
 
 __all__ = [
+    "DraftModel",
+    "DraftSpec",
     "ManualClock",
     "QueueFull",
     "Request",

@@ -133,7 +133,11 @@ class ServeEngine:
                  prefill_buckets: bool | None = None, mesh=None,
                  kv_block_size: int | None = None,
                  kv_blocks: int | None = None, prefix_cache: bool = True,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 spec_decode: int = 0, draft_spec=None):
+        # the drafter refits from the FLOAT weights; capture them before the
+        # kan_deploy quantization below swaps the tree for int8 + SH-LUT
+        float_params = params
         if kan_deploy:
             # Execute every KAN-FFN block on the paper's quantized datapath:
             # int8 c' + SH-LUT through the repro.runtime executor registry
@@ -249,6 +253,7 @@ class ServeEngine:
         self._prefilling: dict[int, dict] = {}  # slot -> chunked-prefill state
         self.prefill_traces = 0
         self.decode_traces = 0
+        self.verify_traces = 0
 
         cfg_ = cfg
         eng = self
@@ -274,6 +279,16 @@ class ServeEngine:
 
             self._prefill_chunk_fn = functools.partial(
                 _prefill_chunk_fn, attn_backend=self.attn_backend)
+
+            @functools.partial(jax.jit, static_argnames=("attn_backend",))
+            def _verify_fn(params, cache, tokens, pos, tables, attn_backend):
+                eng.verify_traces += 1  # python body runs only while tracing
+                with runtime.use_attn_backend(attn_backend):
+                    return M.verify_step(params, cache, tokens, pos, cfg_,
+                                         tables)
+
+            self._verify = functools.partial(
+                _verify_fn, attn_backend=self.attn_backend)
         else:
             @functools.partial(jax.jit, static_argnames=("attn_backend",))
             def _decode(params, cache, token, pos, attn_backend):
@@ -294,6 +309,32 @@ class ServeEngine:
             self._prefill_one = functools.partial(
                 _prefill_one, attn_backend=self.attn_backend)
 
+        # -- speculative decoding (spec_decode=k) ---------------------------
+        self.spec_k = int(spec_decode or 0)
+        self.draft = None
+        if self.spec_k < 0:
+            raise ValueError(f"spec_decode must be >= 0, got {spec_decode}")
+        if self.spec_k:
+            if not kan_deploy:
+                raise ValueError(
+                    "spec_decode requires kan_deploy=True: the drafter is "
+                    "refit from the deployed target's KAN-FFN weights")
+            if not self.paged:
+                raise ValueError(
+                    "spec_decode requires the paged KV cache (set "
+                    "kv_block_size): draft rollback releases pool blocks")
+            from .spec import DraftModel, DraftSpec
+
+            dspec = (draft_spec if isinstance(draft_spec, DraftSpec)
+                     else DraftSpec.parse(draft_spec))
+            self.draft = DraftModel(
+                float_params, cfg, dspec, slots, max_len,
+                kan_backend=self.kan_backend,
+                attn_backend=self.attn_backend, mesh=mesh,
+            )
+        elif draft_spec is not None:
+            raise ValueError("draft_spec without spec_decode=k has no effect")
+
     # -- slot management ------------------------------------------------
 
     def _free_slot(self):
@@ -313,6 +354,8 @@ class ServeEngine:
         when a request finishes; pairs with ``_begin_prefill``/``_admit``."""
         self.active[slot] = None
         self._prefilling.pop(slot, None)
+        if self.draft is not None:
+            self.draft.release(slot)
         if self.paged:
             for bid in self._slot_blocks[slot]:
                 self.pool.release(bid)
@@ -403,6 +446,10 @@ class ServeEngine:
         self.pos[slot] = len(req.prompt)
         self.active[slot] = req
         del self._prefilling[slot]
+        if self.draft is not None:
+            # the drafter needs the prompt in its OWN cache before it can
+            # propose for this slot; one cheap B=1 drafter prefill here
+            self.draft.prefill_slot(slot, req)
         return logits
 
     def _prefill_contiguous(self, slot: int, req: Request) -> np.ndarray:
@@ -477,16 +524,20 @@ class ServeEngine:
         self.pool.publish_prefix(req.prompt, blocks[:plen // bs])
         return np.asarray(logits[0])
 
-    def _ensure_decode_blocks(self) -> None:
-        """Allocate the pool block each active slot's NEXT write lands in
-        (decode writes at ``pos`` before attending); runs on host each
-        round, allocating at most one block per slot per call."""
+    def _ensure_decode_blocks(self, horizon: int = 1) -> None:
+        """Allocate the pool blocks covering each active slot's next
+        ``horizon`` writes (positions ``pos .. pos+horizon-1``, clamped at
+        ``max_len`` — writes past it are dropped on device); runs on host
+        each round.  ``horizon=1`` is the classic one-token decode step
+        (at most one block per slot per call); the speculative verify pass
+        needs ``spec_k + 1``."""
         bs = self.kv_block_size
         for i, r in enumerate(self.active):
             if r is None:
                 continue
             blocks = self._slot_blocks[i]
-            if self.pos[i] // bs >= len(blocks):
+            need = -(-min(int(self.pos[i]) + horizon, self.max_len) // bs)
+            while len(blocks) < need:
                 bid = self.pool.alloc()
                 self.block_tables[i, len(blocks)] = bid
                 blocks.append(bid)
@@ -515,6 +566,47 @@ class ServeEngine:
                 jnp.asarray(self.pos), *args,
             )
         return logits
+
+    def verify_active(self, tokens) -> jax.Array:
+        """One batched speculative VERIFY pass over all slots.
+
+        ``tokens``: (slots, S) int32, S = spec_k + 1 — row i is the slot's
+        last emitted token followed by its draft tokens, occupying
+        positions ``pos[i] .. pos[i]+S-1``.  Returns device logits
+        (slots, S, V); row j is bit-identical to what ``decode_active``
+        would produce after consuming rows 0..j-1 one at a time (see
+        ``models.model.verify_step``).  KV for all S positions is written;
+        the caller rolls back rejected positions with
+        :meth:`truncate_slot`.  ``pos`` bookkeeping is the caller's, same
+        as ``decode_active``."""
+        s = int(tokens.shape[1])
+        self._ensure_decode_blocks(horizon=s)
+        tables = self.block_tables
+        if self._prefilling:
+            # mid-prefill slots ride along with a stale pos; scratch-redirect
+            # their rows exactly as decode_active does
+            tables = tables.copy()
+            for sl in self._prefilling:
+                tables[sl] = 0
+        with runtime.use_backend(self.kan_backend), \
+                runtime.use_mesh(self.mesh), \
+                profile_scope("serve.verify"):
+            logits, self.cache = self._verify(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(self.pos), jnp.asarray(tables),
+            )
+        return logits
+
+    def truncate_slot(self, slot: int, new_len: int) -> None:
+        """Roll back a slot's KV to ``new_len`` positions after a verify
+        round rejected draft tokens: whole tail blocks return to the pool
+        (``kvpool.truncate`` guards cached prefix blocks) and their table
+        rows point back at the scratch block.  Rejected rows inside the
+        kept partial tail block stay — the next verify re-writes them
+        before any query can attend them."""
+        blocks = self._slot_blocks[slot]
+        self.pool.truncate(blocks, new_len)
+        self.block_tables[slot, len(blocks):] = 0
 
     def kv_stats(self) -> dict | None:
         """Paged-pool observability (None on contiguous engines)."""
@@ -551,10 +643,13 @@ class ServeEngine:
         return {
             "prefill_traces": self.prefill_traces,
             "decode_traces": self.decode_traces,
+            "verify_traces": self.verify_traces,
             "plan_cache": runtime.cache_stats(),
             "mesh": self.mesh_layout(),
             "attn_backend": self.attn_backend,
             "kv": self.kv_stats(),
+            "spec": (None if self.draft is None
+                     else {"k": self.spec_k, "draft": self.draft.describe()}),
         }
 
     def mesh_layout(self) -> dict | None:

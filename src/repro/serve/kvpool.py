@@ -89,6 +89,7 @@ class KVBlockPool:
         self.misses = 0        # prompt blocks that had to prefill
         self.allocs = 0
         self.evictions = 0
+        self.truncations = 0   # tail blocks released by truncate()
         self._live = 0         # blocks with refcount > 0
         self.peak_in_use = 0
 
@@ -137,6 +138,36 @@ class KVBlockPool:
                 self._evictable.move_to_end(bid)
             else:
                 self._free.append(bid)
+
+    def truncate(self, block_ids: list, new_len: int) -> list:
+        """Shrink a request's block chain to cover ``new_len`` tokens.
+
+        Releases every WHOLE tail block past ``ceil(new_len / block_size)``
+        (speculative decode rolls back rejected draft positions this way —
+        partially-filled tail rows need no release, the next write simply
+        overwrites them before any query can attend them).  ``block_ids``
+        is truncated in place; the released ids are returned so the caller
+        can reset its device block-table rows.
+
+        Consistency guard: a cached (published) prefix block can never be
+        a truncation victim — shared prefix KV is immutable by
+        construction, and speculative tails always start at or after the
+        prompt end.  Hitting one means the caller's accounting is wrong,
+        so it raises instead of corrupting the prefix cache.
+        """
+        if new_len < 0:
+            raise ValueError(f"new_len must be >= 0, got {new_len}")
+        keep = -(-new_len // self.block_size)  # ceil
+        tail = block_ids[keep:]
+        for bid in tail:
+            if bid in self._block_hash:
+                raise ValueError(
+                    f"truncate would release cached prefix block {bid}; "
+                    f"published blocks are immutable (new_len={new_len})")
+            self.release(bid)
+        self.truncations += len(tail)
+        del block_ids[keep:]
+        return tail
 
     # -- prefix cache -----------------------------------------------------
 
@@ -206,6 +237,7 @@ class KVBlockPool:
 
     def reset_stats(self) -> None:
         self.hits = self.misses = self.allocs = self.evictions = 0
+        self.truncations = 0
         self.peak_in_use = self._live
 
     def stats(self) -> dict:
@@ -222,6 +254,7 @@ class KVBlockPool:
             "prefix_hit_rate": self.hit_rate(),
             "allocs": self.allocs,
             "evictions": self.evictions,
+            "truncations": self.truncations,
         }
 
     def check_consistent(self) -> None:

@@ -178,7 +178,7 @@ def _summary(xs: list) -> dict:
 # engines only; names documented in docs/observability.md).
 _KV_GAUGES = (
     "blocks_in_use", "blocks_in_use_peak", "blocks_cached", "blocks_free",
-    "prefix_hits", "prefix_misses", "allocs", "evictions",
+    "prefix_hits", "prefix_misses", "allocs", "evictions", "truncations",
 )
 
 
@@ -229,6 +229,16 @@ class Scheduler:
         self._ttfts: collections.deque = collections.deque(maxlen=4096)
         self._itls: collections.deque = collections.deque(maxlen=4096)
         self._tokens_done = 0                  # tokens of finished requests
+        # decode-round shape: tokens emitted per (active slot, round) pair —
+        # exactly 1.0 without speculative decoding, 1 + accepted/round with
+        self._round_tokens = 0
+        self._round_slots = 0
+        # speculative-decode aggregates (engine.spec_k > 0 rounds only)
+        self._spec_rounds = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._draft_s: collections.deque = collections.deque(maxlen=4096)
+        self._verify_s: collections.deque = collections.deque(maxlen=4096)
         self._span_start: float | None = None  # first admission
         self._span_end: float | None = None    # last emitted token
         self._depth_samples: collections.deque = collections.deque(
@@ -255,6 +265,10 @@ class Scheduler:
             "prefilling": R.gauge("serve.prefilling_slots"),
             "ttft": R.histogram("serve.ttft_s"),
             "itl": R.histogram("serve.itl_s"),
+            "spec_drafted": R.counter("serve.spec.drafted"),
+            "spec_accepted": R.counter("serve.spec.accepted"),
+            "spec_draft_s": R.histogram("serve.spec.draft_s"),
+            "spec_verify_s": R.histogram("serve.spec.verify_s"),
         }
         for k in _KV_GAUGES:
             mx[f"kv.{k}"] = R.gauge(f"kv.{k}")
@@ -345,7 +359,10 @@ class Scheduler:
             self._last_stats_line = now
             self._stats_line(now)
         if any(r is not None for r in self.engine.active):
-            self._decode_round()
+            if self.engine.spec_k:
+                self._spec_round()
+            else:
+                self._decode_round()
             progressed = True
         return progressed
 
@@ -491,33 +508,157 @@ class Scheduler:
                 continue
             eng.pos[i] += 1
             tok = int(nxt[i]) if rows is None else self._select(r, rows[i])
-            r.output.append(tok)
             # a slot admitted behind the scheduler's back (direct
             # ServeEngine._admit) is adopted on its first decode: timing
             # starts now, its prefill token predates the record
             rec = self._rec.setdefault(
                 r.rid, {"arrival": r.arrival_s, "admit": t, "token_times": []}
             )
-            if self._mx is not None and rec["token_times"]:
-                self._mx["itl"].observe(t - rec["token_times"][-1])
-            rec["token_times"].append(t)
-            self._emit(r, tok)
+            self._round_tokens += 1
+            self._round_slots += 1
+            self._emit_tokens(r, rec, [tok], t)
             if (tok == r.eos_id or len(r.output) >= r.max_new_tokens
                     or eng.pos[i] >= eng.max_len - 1):
-                r.done = True
-                r.status = "done"
-                r.latency_s = t - rec["admit"]
-                self.completed += 1
+                self._finish_request(r, i, t, rec)
+
+    def _spec_round(self) -> None:
+        """One speculative decode round: propose -> verify -> accept/emit.
+
+        The drafter proposes ``spec_k`` greedy tokens per active slot; the
+        target scores all k+1 positions in ONE batched forward
+        (``verify_active``); the longest draft prefix matching the
+        target's own greedy argmax is accepted, and the matching argmax
+        tokens plus the first-mismatch correction are emitted through the
+        SAME per-token finish checks as :meth:`_decode_round`.  Every
+        emitted token is the argmax of the exact logits row the
+        sequential baseline would have produced (``verify_step`` is
+        row-for-row bit-identical to ``decode_step``), so greedy streams
+        are bit-identical to ``spec_decode=0`` — speculation only decides
+        how many rows are consumed per round.  Sampled requests emit ONE
+        token from row 0 under the classic ``(seed, rid, position)`` key
+        schedule, keeping their streams bit-identical too (their drafts
+        are simply discarded).  Rejected draft KV rolls back via
+        ``truncate_slot`` / ``draft.truncate``.
+        """
+        eng = self.engine
+        k = eng.spec_k
+        draft = eng.draft
+        active = [(i, r) for i, r in enumerate(eng.active) if r is not None]
+        # catch-up token lists: the true tokens at drafter positions
+        # dpos..pos inclusive (one entry at steady state; two after a
+        # fully-accepted round — see DraftModel.propose)
+        pend = {}
+        for i, r in active:
+            plen = len(r.prompt)
+            lo, hi = int(draft.pos[i]), int(eng.pos[i])
+            pend[i] = [r.prompt[p] if p < plen else r.output[p - plen]
+                       for p in range(lo, hi + 1)]
+        t0 = time.perf_counter()
+        drafts = draft.propose(pend, k)
+        t1 = time.perf_counter()
+        tokens = np.zeros((eng.slots, k + 1), np.int32)
+        for i, r in active:
+            tokens[i, 0] = r.output[-1]
+            tokens[i, 1:] = drafts[i]
+        logits = eng.verify_active(tokens)
+        self.decode_steps += 1
+        self._spec_rounds += 1
+        if self._mx is not None:
+            self._mx["decode_steps"].inc()
+        # pure-greedy pools take the device-side argmax — (slots, k+1) ints
+        # per round, not the logits cube; full rows come to host only when
+        # some active request actually samples
+        if any(getattr(r, "sampling", None) is not None for _, r in active):
+            rows = np.asarray(logits)                       # (slots, k+1, V)
+            g = np.argmax(rows, axis=-1)
+        else:
+            rows = None
+            g = np.asarray(jnp.argmax(logits, axis=-1))     # (slots, k+1)
+        t2 = time.perf_counter()
+        self._draft_s.append(t1 - t0)
+        self._verify_s.append(t2 - t1)
+        if self._mx is not None:
+            self._mx["spec_draft_s"].observe(t1 - t0)
+            self._mx["spec_verify_s"].observe(t2 - t1)
+        t = self.elapsed()
+        self._span_end = t
+        for i, r in active:
+            rec = self._rec.setdefault(
+                r.rid, {"arrival": r.arrival_s, "admit": t, "token_times": []}
+            )
+            sampled = getattr(r, "sampling", None) is not None
+            if sampled:
+                toks = [self._select(r, rows[i, 0])]
+            else:
+                m = 0
+                while m < k and int(tokens[i, m + 1]) == int(g[i, m]):
+                    m += 1
+                toks = [int(g[i, j]) for j in range(m + 1)]
+                self._spec_drafted += k
+                self._spec_accepted += m
                 if self._mx is not None:
-                    self._mx["completed"].inc()
-                self._trace_finish(r, "done")
-                self.finished.append(r)
-                eng.release_slot(i)
-                self._finish_cb(r)
-                self._retire(r.rid)
-                self.log.debug("request done", rid=r.rid,
-                               tokens=len(r.output),
-                               latency_s=round(r.latency_s, 3))
+                    self._mx["spec_drafted"].inc(k)
+                    self._mx["spec_accepted"].inc(m)
+            # accepted tokens still pass the baseline's PER-TOKEN finish
+            # checks: acceptance can never run past EOS / max_new_tokens /
+            # the max_len position cap (tokens after the finish point are
+            # discarded, exactly as the baseline would never produce them)
+            emit = []
+            out_len = len(r.output)
+            posi = int(eng.pos[i])
+            finished = False
+            for tok in toks:
+                posi += 1
+                out_len += 1
+                emit.append(tok)
+                if (tok == r.eos_id or out_len >= r.max_new_tokens
+                        or posi >= eng.max_len - 1):
+                    finished = True
+                    break
+            eng.pos[i] = posi
+            self._round_tokens += len(emit)
+            self._round_slots += 1
+            self._emit_tokens(r, rec, emit, t)
+            if finished:
+                self._finish_request(r, i, t, rec)
+            else:
+                # roll back the rejected speculative KV tail on both models
+                eng.truncate_slot(i, posi)
+                draft.truncate(i, posi)
+
+    def _finish_request(self, r, slot: int, t: float, rec: dict) -> None:
+        r.done = True
+        r.status = "done"
+        r.latency_s = t - rec["admit"]
+        self.completed += 1
+        if self._mx is not None:
+            self._mx["completed"].inc()
+        self._trace_finish(r, "done")
+        self.finished.append(r)
+        self.engine.release_slot(slot)
+        self._finish_cb(r)
+        self._retire(r.rid)
+        self.log.debug("request done", rid=r.rid, tokens=len(r.output),
+                       latency_s=round(r.latency_s, 3))
+
+    def _emit_tokens(self, r, rec: dict, toks: list, t: float) -> None:
+        """Record + stream tokens emitted together at wall instant ``t``.
+
+        Multi-token acceptance (speculative decode) lands n > 1 tokens of
+        one request in one round; inter-token latency stays
+        per-EMITTED-token by spreading the round's wall time uniformly
+        across them — each gap records as (t - last) / n, which at n = 1
+        is exactly the classic per-round ITL."""
+        times = rec["token_times"]
+        n = len(toks)
+        last = times[-1] if times else t
+        for j, tok in enumerate(toks, start=1):
+            tj = t if j == n else last + (t - last) * (j / n)
+            r.output.append(tok)
+            if self._mx is not None and times:
+                self._mx["itl"].observe(tj - times[-1])
+            times.append(tj)
+            self._emit(r, tok)
 
     def _retire(self, rid: int) -> None:
         """Fold a finished request's record into the capped aggregates and
@@ -630,11 +771,20 @@ class Scheduler:
 
         TTFT is measured from *arrival* (not admission), so queueing delay
         under load shows up where a caller would feel it; inter-token
-        latencies are the gaps between consecutive emitted tokens of one
-        request, pooled over all requests (finished aggregates plus the
-        currently active requests' partial streams).  ``tokens_per_s``
-        spans first admission to the last emitted token.  TTFT/ITL
-        percentiles are over the most recent 4096 samples.
+        latencies are PER EMITTED TOKEN — the gaps between consecutive
+        emitted tokens of one request, pooled over all requests (finished
+        aggregates plus the currently active requests' partial streams).
+        When a round emits n > 1 tokens of one request (speculative
+        multi-token acceptance) the round's wall time spreads uniformly
+        across them, so ITL keeps meaning seconds-per-token instead of
+        deflating to seconds-per-round; ``tokens_per_round`` (mean tokens
+        emitted per active slot per decode round — exactly 1.0 without
+        speculation) carries the round-shape signal separately.
+        ``tokens_per_s`` spans first admission to the last emitted token.
+        TTFT/ITL percentiles are over the most recent 4096 samples.
+        ``spec`` is None unless the engine speculates (``spec_decode=k``);
+        ``accept_rate`` is accepted/drafted over greedy slots (sampled
+        requests discard their drafts and are not counted).
 
         Every field is defined for every scheduler state: zero completed
         requests never divides by zero or emits NaN (``tokens_per_s`` is
@@ -665,8 +815,20 @@ class Scheduler:
             "kv": self.engine.kv_stats(),
             "tokens": tokens,
             "tokens_per_s": (tokens / span) if span > 0 else None,
+            "tokens_per_round": (self._round_tokens / self._round_slots
+                                 if self._round_slots else None),
             "ttft_s": _summary(list(self._ttfts)) if self._ttfts else None,
             "itl_s": _summary(itls),
+            "spec": (None if not getattr(self.engine, "spec_k", 0) else {
+                "k": self.engine.spec_k,
+                "rounds": self._spec_rounds,
+                "drafted": self._spec_drafted,
+                "accepted": self._spec_accepted,
+                "accept_rate": (self._spec_accepted / self._spec_drafted
+                                if self._spec_drafted else None),
+                "draft_s": _summary(list(self._draft_s)),
+                "verify_s": _summary(list(self._verify_s)),
+            }),
             "queue_depth": {
                 "samples": len(self._depth_samples),
                 "rounds": self._depth_rounds,

@@ -1,0 +1,336 @@
+"""Speculative decoding: a cheap refit KAN drafter + one-pass batched verify.
+
+The paper's co-design premise is that ASP quantization + the fused spline
+pipeline buy a *cheap approximate* datapath next to the exact one.  This
+module cashes that in for serving latency: a **draft model** built from the
+deployed target's own float weights via ``core.kan_layer.refit_layer_spec``
+— reduced spline grid/order and/or lower ASP bits, optionally routed
+through a cheaper runtime backend, NO retraining — proposes ``k`` greedy
+tokens per active slot, and the target scores all ``k+1`` positions in ONE
+batched forward (``models.model.verify_step``) through the existing paged
+KV machinery.  The longest draft prefix matching the target's own greedy
+argmax is accepted, so emitted streams are **bit-identical** to plain
+decode: every emitted token is an argmax of the exact logits row the
+sequential baseline would have produced (the verify pass is row-for-row
+bit-identical to ``decode_step`` — see ``tests/test_spec_decode.py``).
+The drafter only decides how MANY of those rows are consumed per round.
+
+Layering: :class:`DraftSpec` describes the drafter's reduced deployment
+point; :class:`DraftModel` owns the refit+quantized params, a small
+contiguous per-slot KV cache, and the lockstep batched propose loop.  The
+engine (``serve.engine``) owns the verify pass + KV rollback
+(``kvpool.truncate``); the scheduler (``serve.scheduler``) owns the
+propose -> verify -> accept/emit round shape and the accept-rate metrics.
+
+KV bookkeeping invariant (mirrors the engine's): ``pos[slot]`` counts the
+drafter-KV positions known to hold the TRUE token stream — positions
+written with draft tokens that were later rejected are *behind* ``pos``
+only until ``truncate`` rolls ``pos`` back over them; the next propose
+round re-writes those rows with true tokens before any query can attend
+them (scatter precedes gather in ``attention_decode``, and masked lanes
+contribute exact zeros).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+from .. import runtime
+from ..obs.trace import profile_scope
+
+__all__ = ["DraftSpec", "DraftModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftSpec:
+    """Deployment point of the drafter, relative to the target config.
+
+    ``None`` fields inherit/derive from the target: ``grid`` halves the
+    target's spline grid (the cheapest refit that keeps useful accept
+    rates — KANtize-style low-G variants retain most accuracy), ``order``
+    and ``n_bits`` inherit, ``backend`` inherits the engine's KAN backend
+    resolution.  Parse the ``--draft-spec`` CLI form with :meth:`parse`:
+    ``"grid=4,order=2,bits=6,backend=ref"`` (any subset of keys).
+    """
+
+    grid: int | None = None
+    order: int | None = None
+    n_bits: int | None = None
+    backend: str | None = None
+
+    _KEYS = {"grid": "grid", "order": "order", "bits": "n_bits",
+             "n_bits": "n_bits", "backend": "backend"}
+
+    @classmethod
+    def parse(cls, s: str | None) -> "DraftSpec":
+        if not s:
+            return cls()
+        kw = {}
+        for part in s.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad --draft-spec entry {part!r} "
+                                 f"(want key=value)")
+            key, val = part.split("=", 1)
+            field = cls._KEYS.get(key.strip())
+            if field is None:
+                raise ValueError(f"unknown --draft-spec key {key!r} "
+                                 f"(known: grid, order, bits, backend)")
+            kw[field] = val.strip() if field == "backend" else int(val)
+        return cls(**kw)
+
+    def resolve(self, cfg: ModelConfig) -> tuple:
+        """(grid, order, n_bits) for the drafter given the target config."""
+        grid = self.grid if self.grid is not None else max(2, cfg.kan_grid // 2)
+        order = self.order if self.order is not None else cfg.kan_order
+        n_bits = self.n_bits if self.n_bits is not None else cfg.kan_n_bits
+        if grid < 1 or order < 1 or n_bits < 1:
+            raise ValueError(f"draft spec fields must be >= 1, got "
+                             f"grid={grid} order={order} bits={n_bits}")
+        return grid, order, n_bits
+
+
+def refit_kan_ffn_params_tree(params: dict, cfg: ModelConfig,
+                              draft_cfg: ModelConfig) -> dict:
+    """Refit every KAN-FFN block of a FLOAT param tree onto the drafter's
+    (G, K) basis by least squares (``refit_layer_spec`` — the PR-3 grid
+    transfer, no retraining).  Same group walk as
+    ``quantize_kan_ffn_params_tree``; edge counts and the hidden width are
+    unchanged (``draft_cfg`` must pin ``kan_d_hidden``), only the
+    per-edge coefficient basis shrinks from G+K to G'+K' columns."""
+    from ..core.kan_layer import refit_layer_spec
+    from ..models.layers import kan_ffn_spec
+
+    old_spec = kan_ffn_spec(cfg)
+    new_spec = kan_ffn_spec(draft_cfg)
+
+    def refit_ffn(ffn: dict) -> dict:
+        l1 = refit_layer_spec({"c": ffn["c1"], "w_b": ffn["wb1"]},
+                              old_spec, new_spec)
+        l2 = refit_layer_spec({"c": ffn["c2"], "w_b": ffn["wb2"]},
+                              old_spec, new_spec)
+        return {"c1": l1["c"], "wb1": l1["w_b"],
+                "c2": l2["c"], "wb2": l2["w_b"]}
+
+    def refit_group(gp: dict) -> dict:
+        out = dict(gp)
+        for k, v in gp.items():
+            if not k.endswith("_ffn"):
+                continue
+            repeats = v["c1"].shape[0]
+            rs = [refit_ffn(jax.tree.map(lambda a: a[r], v))
+                  for r in range(repeats)]
+            out[k] = jax.tree.map(lambda *xs: jnp.stack(xs), *rs)
+        return out
+
+    p = dict(params)
+    for stack_key in ("decoder", "encoder"):
+        if stack_key in p:
+            p[stack_key] = [refit_group(g) for g in p[stack_key]]
+    return p
+
+
+class DraftModel:
+    """The drafter: refit+quantized params + small per-slot KV state.
+
+    Built from the target's FLOAT params (captured by the engine before its
+    own quantization pass): every KAN-FFN block is refit onto the reduced
+    (G, K) basis, then ASP-quantized at the drafter's bit width, and the
+    result deploys through the SAME runtime plan cache as the target — its
+    reduced specs key separate plan entries, so drafter and target never
+    share (or retrace) each other's compiled pipelines.
+
+    The KV state is a plain contiguous ``(slots, max_len)`` cache (drafter
+    sequences are as long as the target's but the drafter is cheap — paging
+    it would buy nothing and cost a second pool); ``pos[slot]`` tracks the
+    true-token watermark per the module docstring.
+    """
+
+    def __init__(self, float_params, cfg: ModelConfig, spec: DraftSpec,
+                 slots: int, max_len: int, kan_backend: str | None = None,
+                 attn_backend: str | None = None, mesh=None):
+        from ..core.kan_ffn_deploy import quantize_kan_ffn_params_tree
+        from ..models.layers import kan_ffn_hidden
+
+        if cfg.ffn_kind != "kan":
+            raise ValueError("DraftModel requires a KAN-FFN target config")
+        grid, order, n_bits = spec.resolve(cfg)
+        # kan_d_hidden MUST be pinned: the default hidden-width rule divides
+        # by G+K, which the drafter changes — the drafter must keep the
+        # target's layer geometry (only the per-edge basis shrinks)
+        self.cfg = dataclasses.replace(
+            cfg, kan_grid=grid, kan_order=order, kan_n_bits=n_bits,
+            kan_d_hidden=kan_ffn_hidden(cfg),
+        )
+        self.spec = spec
+        self.kan_backend = (spec.backend if spec.backend is not None
+                            else kan_backend)
+        runtime.resolve_backend(self.kan_backend)  # validate eagerly
+        self.attn_backend = runtime.resolve_attn_backend(attn_backend)
+        self.slots = slots
+        self.max_len = max_len
+        self.mesh = mesh
+        params = refit_kan_ffn_params_tree(float_params, cfg, self.cfg)
+        params = quantize_kan_ffn_params_tree(params, self.cfg)
+        if mesh is not None:
+            from ..dist.sharding import (cache_pspecs, param_pspecs,
+                                         to_shardings)
+
+            params = jax.device_put(
+                params, to_shardings(param_pspecs(params, mesh), mesh))
+        self.params = params
+        self.cache = M.init_cache(params, self.cfg, slots, max_len)
+        if mesh is not None:
+            self.cache = jax.device_put(
+                self.cache,
+                to_shardings(cache_pspecs(self.cache, mesh, slots), mesh))
+        self.pos = np.zeros(slots, np.int32)
+        self.decode_traces = 0
+        self.prefill_traces = 0
+
+        dcfg = self.cfg
+        drf = self
+
+        @functools.partial(jax.jit, static_argnames=("attn_backend",))
+        def _decode(params, cache, token, pos, attn_backend):
+            drf.decode_traces += 1  # python body runs only while tracing
+            with runtime.use_attn_backend(attn_backend):
+                return M.decode_step(params, cache, token, pos, dcfg)
+
+        self._decode = functools.partial(_decode,
+                                         attn_backend=self.attn_backend)
+
+        @functools.partial(jax.jit, static_argnames=("attn_backend",))
+        def _prefill_one(params, tokens, last_index, attn_backend):
+            drf.prefill_traces += 1
+            with runtime.use_attn_backend(attn_backend):
+                return M.prefill(params, {"tokens": tokens}, dcfg,
+                                 max_len=max_len, last_index=last_index)
+
+        self._prefill = functools.partial(_prefill_one,
+                                          attn_backend=self.attn_backend)
+
+    # -- per-slot lifecycle ------------------------------------------------
+
+    def prefill_slot(self, slot: int, req) -> None:
+        """Prefill ``req``'s prompt into the drafter's cache row for
+        ``slot`` (B=1, power-of-two length bucket like the engine's
+        contiguous prefill; pad KV is zeroed out of the splice)."""
+        plen = len(req.prompt)
+        prompt = list(req.prompt)
+        lb = runtime.bucket_batch(plen)
+        if plen < lb <= self.max_len - 1:
+            prompt = prompt + [0] * (lb - plen)
+        tokens = jnp.asarray([prompt], jnp.int32)
+        with runtime.use_backend(self.kan_backend), \
+                runtime.use_mesh(self.mesh), \
+                profile_scope("serve.draft_prefill"):
+            _, cache1 = self._prefill(
+                self.params, tokens, jnp.asarray([plen - 1], jnp.int32))
+        tmask = jnp.arange(self.max_len) < plen
+
+        def splice(pool, one):
+            one = one[:, 0]                      # (repeats, T, H, D)
+            if one.ndim >= 2 and one.shape[1] == self.max_len:
+                one = jnp.where(
+                    tmask.reshape((1, -1) + (1,) * (one.ndim - 2)), one, 0)
+            return pool.at[:, slot].set(one)
+
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+        self.pos[slot] = plen
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Roll the slot's true-token watermark back to ``new_len`` after a
+        verify round rejected draft positions (rejected rows are re-written
+        by the next propose before anything can attend them)."""
+        self.pos[slot] = min(int(self.pos[slot]), int(new_len))
+
+    def release(self, slot: int) -> None:
+        self.pos[slot] = 0
+
+    # -- propose -----------------------------------------------------------
+
+    def propose(self, pend: dict, k: int) -> dict:
+        """Draft ``k`` greedy tokens for every slot in ``pend``.
+
+        ``pend[slot]`` is that slot's catch-up token list: the true tokens
+        at drafter positions ``pos[slot] .. engine_pos`` inclusive — at
+        steady state just the last emitted token (one entry); after a
+        fully-accepted round, two (the drafter never saw the final accepted
+        draft's KV row).  All slots advance in LOCKSTEP through one batched
+        single-token decode per step: slot ``i`` feeds ``pend[i]`` first,
+        then chains its own argmax, for ``max_len(pend) - 1 + k`` steps.
+        Slots needing fewer steps keep chaining past ``k`` (their extra KV
+        rows are rolled back by ``truncate``); slots not in ``pend`` ride
+        along feeding token 0 (their rows are dead: either scratch state a
+        future prefill overwrites, or positions past a retired stream).
+
+        Returns ``{slot: [k draft token ids]}``.  After this call
+        ``pos[slot]`` assumes all k drafts verify (``engine_pos + k``); the
+        caller MUST follow up with :meth:`truncate` to the accepted length.
+        """
+        if k < 1:
+            raise ValueError(f"propose needs k >= 1, got {k}")
+        if not pend:
+            return {}
+        queues = {i: list(toks) for i, toks in pend.items()}
+        for i, q in queues.items():
+            if not q:
+                raise ValueError(f"slot {i}: empty pend (drafter ahead of "
+                                 f"engine?)")
+        nsteps = max(len(q) for q in queues.values()) - 1 + k
+        drafts = {i: [] for i in queues}
+        chain = np.zeros(self.slots, np.int32)   # last argmax per slot
+        pos = self.pos.copy()
+        with runtime.use_backend(self.kan_backend), \
+                runtime.use_mesh(self.mesh), \
+                profile_scope("serve.draft", steps=nsteps):
+            for step in range(nsteps):
+                feed = np.zeros(self.slots, np.int32)
+                for i, q in queues.items():
+                    feed[i] = q[step] if step < len(q) else chain[i]
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(feed),
+                    jnp.asarray(pos))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                pos += 1
+                for i, q in queues.items():
+                    chain[i] = nxt[i]
+                    if step >= len(q) - 1 and len(drafts[i]) < k:
+                        drafts[i].append(int(nxt[i]))
+        for i, q in queues.items():
+            # rows written through engine_pos + k - 1; next valid write at:
+            self.pos[i] = int(self.pos[i]) + len(q) - 1 + k
+        return drafts
+
+    # -- observability -----------------------------------------------------
+
+    def describe(self) -> dict:
+        from ..core.kan_layer import KANSpec, param_count
+        from ..models.layers import kan_ffn_hidden
+
+        def ffn_params(c: ModelConfig) -> int:
+            dims = (c.d_model, kan_ffn_hidden(c), c.d_model)
+            return param_count(KANSpec(dims=dims, grid_size=c.kan_grid,
+                                       order=c.kan_order))
+
+        base = self.cfg  # target fields live on the engine; report ours
+        return {
+            "kan_grid": base.kan_grid,
+            "kan_order": base.kan_order,
+            "kan_n_bits": base.kan_n_bits,
+            "kan_backend": self.kan_backend,
+            "attn_backend": self.attn_backend,
+            "ffn_params_per_block": ffn_params(base),
+            "decode_traces": self.decode_traces,
+            "prefill_traces": self.prefill_traces,
+        }

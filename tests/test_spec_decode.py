@@ -1,0 +1,379 @@
+"""Speculative decoding correctness (the PR-9 acceptance contract).
+
+The load-bearing invariant: greedy token streams under ``spec_decode=k``
+are BIT-IDENTICAL to plain decode (``spec_decode=0``) on the same request
+set — for k in {2, 4}, per runtime backend (``ref`` / ``pallas`` / quiet
+``acim``) and on a 1x1 mesh — because acceptance is the longest draft
+prefix matching the target's own greedy argmax over verify rows that are
+row-for-row bit-identical to sequential ``decode_step`` outputs.  The
+drafter only decides how MANY of those rows are consumed per round; it can
+never change WHICH token any position emits.
+
+On top of that: ``verify_step`` row-level parity with ``decode_step``
+(logits AND caches), the ``refit_layer_spec`` grid transfer at
+simultaneously reduced G and K (deterministic replan, param-count shrink,
+w_b passthrough), drafter deployment through the shared plan cache without
+retracing any target entry, the KV pool's ``truncate`` rollback guards,
+and the scheduler's spec metrics surface (``tokens_per_round``,
+accept-rate block, per-emitted-token ITL counts).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime
+from repro.configs.registry import smoke_config
+from repro.models import model as M
+from repro.models.model import init_params
+from repro.runtime.executor import ACIMExecutor
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvpool import KVBlockPool
+from repro.serve.scheduler import Scheduler
+from repro.serve.spec import DraftModel, DraftSpec
+
+# zero-noise acim executor: traces the same program as "pallas", so its
+# greedy streams take part in the bit-identity acceptance (test_scheduler
+# idiom)
+runtime.register_executor(
+    "acim-quiet", ACIMExecutor(cim=runtime.quiet_cim_config())
+)
+
+PAGED = dict(kv_block_size=8, kv_blocks=32, prefill_chunk=8)
+
+
+@pytest.fixture(scope="module")
+def kan_setup():
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def make_reqs(cfg, n=3, max_new=6, seed=42):
+    """Mixed-length prompts (different drafter prefill buckets + chunked
+    engine prefill shapes) so rounds interleave prefills with spec rounds."""
+    rng = jax.random.PRNGKey(seed)
+    reqs = []
+    for rid in range(n):
+        rng, k = jax.random.split(rng)
+        plen = 4 + 3 * rid
+        prompt = jax.random.randint(k, (plen,), 3, cfg.vocab_size).tolist()
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
+    return reqs
+
+
+def serve(params, cfg, k, backend=None, mesh=None, draft_spec=None, reqs=None):
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                      kan_backend=backend, mesh=mesh, spec_decode=k,
+                      draft_spec=draft_spec, **PAGED)
+    out = {r.rid: r.output for r in eng.run(reqs or make_reqs(cfg))}
+    return out, eng
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: bit-identical greedy streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas", "acim-quiet"])
+@pytest.mark.parametrize("k", [2, 4])
+def test_spec_streams_bit_identical_per_backend(kan_setup, backend, k):
+    cfg, params = kan_setup
+    base, _ = serve(params, cfg, 0, backend=backend)
+    out, eng = serve(params, cfg, k, backend=backend)
+    assert out == base
+    stats = eng.compile_stats()
+    assert stats["verify_traces"] == 1  # one (slots, k+1) verify program
+    assert stats["spec"]["k"] == k
+    # the drafter deployed at the default halved grid on the same backend
+    assert stats["spec"]["draft"]["kan_grid"] == max(2, cfg.kan_grid // 2)
+    assert stats["spec"]["draft"]["kan_backend"] == backend
+
+
+def test_spec_streams_bit_identical_with_draft_spec_and_k1(kan_setup):
+    """A deliberately mismatched drafter (tiny grid, reduced order, fewer
+    bits, different backend) and the degenerate k=1 round shape still
+    reproduce the baseline stream exactly — acceptance, not drafting,
+    decides every emitted token."""
+    cfg, params = kan_setup
+    base, _ = serve(params, cfg, 0)
+    for k, spec in ((1, None), (2, "grid=2,order=2,bits=6,backend=ref")):
+        out, _ = serve(params, cfg, k, draft_spec=spec)
+        assert out == base, (k, spec)
+
+
+def test_spec_mesh_1x1_bit_identical(kan_setup):
+    from repro.launch.mesh import make_local_mesh
+
+    cfg, params = kan_setup
+    base, _ = serve(params, cfg, 0)
+    out, _ = serve(params, cfg, 2, mesh=make_local_mesh(1, 1))
+    assert out == base
+
+
+# ---------------------------------------------------------------------------
+# verify_step: row-for-row parity with sequential decode_step
+# ---------------------------------------------------------------------------
+
+
+def test_verify_step_rows_match_sequential_decode(kan_setup):
+    """One batched (B, S) verify forward == S sequential decode_steps,
+    bit-exact on logits AND on the KV written back to the paged pool."""
+    cfg, params = kan_setup
+    from repro.core.kan_ffn_deploy import quantize_kan_ffn_params_tree
+
+    p = quantize_kan_ffn_params_tree(params, cfg)
+    b, s, bs, nb = 2, 4, 8, 9
+    table = jnp.asarray([[1, 2], [3, 4]], jnp.int32)  # 2 blocks/slot
+    key = jax.random.PRNGKey(7)
+    tokens = jax.random.randint(key, (b, s), 3, cfg.vocab_size)
+    pos0 = jnp.asarray([0, 3], jnp.int32)  # unequal frontiers
+
+    with runtime.use_backend("ref"):
+        cache = M.init_paged_cache(p, cfg, nb, bs)
+        seq = []
+        for j in range(s):
+            logits, cache = M.decode_step(p, cache, tokens[:, j], pos0 + j,
+                                          cfg, block_table=table)
+            seq.append(logits)
+        seq_cache = cache
+
+        cache = M.init_paged_cache(p, cfg, nb, bs)
+        ver, ver_cache = M.verify_step(p, cache, tokens, pos0, cfg, table)
+
+    assert ver.shape == (b, s, cfg.vocab_size)
+    for j in range(s):
+        np.testing.assert_array_equal(np.asarray(ver[:, j]),
+                                      np.asarray(seq[j]))
+    jax.tree.map(lambda a, b_: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b_)), seq_cache, ver_cache)
+
+
+# ---------------------------------------------------------------------------
+# refit_layer_spec at simultaneously reduced G AND K
+# ---------------------------------------------------------------------------
+
+
+def test_refit_reduced_grid_and_order(kan_setup):
+    from repro.core.kan_layer import (KANSpec, bspline_basis, param_count)
+    from repro.models.layers import kan_ffn_hidden, kan_ffn_spec
+    from repro.serve.spec import refit_kan_ffn_params_tree
+
+    cfg, params = kan_setup
+    draft_cfg = dataclasses.replace(cfg, kan_grid=4, kan_order=2,
+                                    kan_d_hidden=kan_ffn_hidden(cfg))
+    old, new = kan_ffn_spec(cfg), kan_ffn_spec(draft_cfg)
+    assert (new.grid_size, new.order) == (4, 2)
+    assert (old.grid_size, old.order) == (cfg.kan_grid, cfg.kan_order)
+
+    refit = refit_kan_ffn_params_tree(params, cfg, draft_cfg)
+    blk = params["decoder"][0]["l0_ffn"]
+    rblk = refit["decoder"][0]["l0_ffn"]
+    # basis shrinks from G+K to G'+K' columns; edge geometry unchanged
+    assert blk["c1"].shape[-2] == old.grid_size + old.order
+    assert rblk["c1"].shape[-2] == new.grid_size + new.order
+    assert blk["c1"].shape[:-2] == rblk["c1"].shape[:-2]
+    # w_b rides through the refit untouched, bit for bit
+    np.testing.assert_array_equal(np.asarray(blk["wb1"]),
+                                  np.asarray(rblk["wb1"]))
+    # deterministic replan: the same refit twice is bit-identical
+    refit2 = refit_kan_ffn_params_tree(params, cfg, draft_cfg)
+    np.testing.assert_array_equal(np.asarray(rblk["c1"]),
+                                  np.asarray(refit2["decoder"][0]["l0_ffn"]["c1"]))
+    # the reduced basis is the least-squares fit of the SAME spline: on the
+    # shared knot domain the refit function tracks the original closely
+    xs = jnp.linspace(old.lo, old.hi, 64)
+    ob = bspline_basis(xs, old.lo, old.hi, old.grid_size, old.order)
+    nb = bspline_basis(xs, new.lo, new.hi, new.grid_size, new.order)
+    f_old = jnp.einsum("sn,fno->sfo", ob, blk["c1"][0])
+    f_new = jnp.einsum("sn,fno->sfo", nb, rblk["c1"][0])
+
+    def rms(a):
+        return float(jnp.sqrt(jnp.mean(a * a)))
+
+    # best-L2 fit onto the much smaller basis: captures well over half the
+    # energy of the rough random-init splines (a zero fit would score 1.0)
+    assert rms(f_old - f_new) < 0.5 * rms(f_old)
+
+    # the paper's #Param convention shrinks with (G + K + 1)
+    dims = (cfg.d_model, kan_ffn_hidden(cfg), cfg.d_model)
+    n_t = param_count(KANSpec(dims=dims, grid_size=cfg.kan_grid,
+                              order=cfg.kan_order))
+    n_d = param_count(KANSpec(dims=dims, grid_size=4, order=2))
+    assert n_d < n_t
+
+    drafter = DraftModel(params, cfg, DraftSpec(grid=4, order=2),
+                         slots=2, max_len=32)
+    d = drafter.describe()
+    assert (d["kan_grid"], d["kan_order"]) == (4, 2)
+    assert d["ffn_params_per_block"] == n_d
+    # the drafter keeps the target's layer geometry (hidden width pinned)
+    assert drafter.cfg.kan_d_hidden == kan_ffn_hidden(cfg)
+
+
+def test_draft_deploys_without_retracing_target_plans(kan_setup):
+    """The drafter's reduced specs key SEPARATE plan-cache entries: serving
+    the same workload spec-on after a spec-off warmup only ever traces NEW
+    entries (every trace delta is an entry delta — no target entry is
+    retraced), and the spec-off engine's plans replay as pure hits."""
+    cfg, params = kan_setup
+    runtime.reset_cache()
+    serve(params, cfg, 0)                      # warm the target's plans
+    s0 = runtime.cache_stats()
+    out, _ = serve(params, cfg, 2, draft_spec="grid=4,order=2")
+    s1 = runtime.cache_stats()
+    d_traces = s1["traces"] - s0["traces"]
+    d_entries = s1["entries"] - s0["entries"]
+    assert d_entries > 0                       # the drafter added its plans
+    assert d_traces == d_entries, (d_traces, d_entries)
+    # replaying the spec engine hits both plan sets without a single trace
+    s2 = runtime.cache_stats()
+    serve(params, cfg, 2, draft_spec="grid=4,order=2")
+    s3 = runtime.cache_stats()
+    assert s3["traces"] == s2["traces"]
+    assert s3["hits"] > s2["hits"]
+
+
+# ---------------------------------------------------------------------------
+# KV pool truncate: speculative rollback bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_truncate_releases_whole_tail_blocks():
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    blocks = [pool.alloc() for _ in range(4)]  # covers 16 token positions
+    keep = list(blocks)
+    tail = pool.truncate(blocks, 9)            # ceil(9/4)=3 blocks stay
+    assert blocks == keep[:3] and tail == keep[3:]
+    assert pool.truncations == 1
+    assert pool.blocks_in_use() == 3
+    assert pool.truncate(blocks, 12) == []     # boundary: nothing to drop
+    assert pool.truncate(blocks, 0) == keep[:3]
+    assert pool.blocks_in_use() == 0
+    with pytest.raises(ValueError):
+        pool.truncate(blocks, -1)
+    pool.check_consistent()
+    assert pool.stats()["truncations"] == 4
+
+
+def test_truncate_refuses_cached_prefix_blocks():
+    pool = KVBlockPool(num_blocks=8, block_size=4)
+    prompt = list(range(8))                    # two FULL published blocks
+    blocks = [pool.alloc(), pool.alloc(), pool.alloc()]
+    pool.publish_prefix(prompt, blocks[:2])
+    with pytest.raises(ValueError, match="cached prefix"):
+        pool.truncate(list(blocks), 4)         # would release published [1]
+    # rollback over the request's OWN tail is fine right up to the boundary
+    tail = pool.truncate(blocks, 8)
+    assert len(tail) == 1
+    pool.check_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler metrics surface
+# ---------------------------------------------------------------------------
+
+
+def test_stats_tokens_per_round_and_spec_block(kan_setup):
+    cfg, params = kan_setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                      spec_decode=2, **PAGED)
+    sched = Scheduler(eng)
+    reqs = make_reqs(cfg)
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_idle()
+    s = sched.stats()
+    sp = s["spec"]
+    assert sp["k"] == 2 and sp["rounds"] > 0
+    assert 0 < sp["drafted"] <= 2 * eng.slots * sp["rounds"]
+    assert 0 <= sp["accepted"] <= sp["drafted"]
+    assert 0.0 <= sp["accept_rate"] <= 1.0
+    assert sp["draft_s"]["p50"] > 0 and sp["verify_s"]["p50"] > 0
+    # accepted drafts make rounds emit >1 token per active slot on average
+    # (bounded by the k+1 rows a verify pass scores)
+    assert 1.0 <= s["tokens_per_round"] <= 3.0
+    # ITL is per EMITTED token: one gap per token after each first token
+    assert s["itl_s"]["n"] == s["tokens"] - s["completed"]
+
+    # spec off: the same surface degenerates exactly
+    eng0 = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                       **PAGED)
+    sched0 = Scheduler(eng0)
+    for r in make_reqs(cfg):
+        sched0.submit(r)
+    sched0.run_until_idle()
+    s0 = sched0.stats()
+    assert s0["spec"] is None
+    assert s0["tokens_per_round"] == 1.0
+    assert s0["itl_s"]["n"] == s0["tokens"] - s0["completed"]
+
+
+def test_spec_with_sampled_requests_emits_one_token_per_round(kan_setup):
+    """Sampled slots ride spec rounds but emit exactly one token from the
+    verify row (the classic per-position key schedule), excluded from the
+    accept-rate counters; their streams reproduce the spec-off sampler."""
+    from repro.serve.scheduler import SamplingParams
+
+    cfg, params = kan_setup
+    sp = SamplingParams(temperature=0.9, top_k=16, seed=7)
+
+    def sampled(k):
+        eng = ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                          spec_decode=k, **PAGED)
+        sched = Scheduler(eng)
+        rng = jax.random.PRNGKey(42)
+        reqs = []
+        for rid in range(2):
+            rng, kk = jax.random.split(rng)
+            prompt = jax.random.randint(kk, (5,), 3, cfg.vocab_size).tolist()
+            reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=4,
+                                sampling=sp))
+        for r in reqs:
+            sched.submit(r)
+        sched.run_until_idle()
+        return {r.rid: r.output for r in reqs}, sched.stats()
+
+    base, _ = sampled(0)
+    out, s = sampled(2)
+    assert out == base
+    assert s["spec"]["drafted"] == 0           # sampled slots never counted
+    assert s["tokens_per_round"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# DraftSpec parsing / resolution
+# ---------------------------------------------------------------------------
+
+
+def test_draft_spec_parse_and_resolve(kan_setup):
+    cfg, _ = kan_setup
+    full = DraftSpec.parse("grid=4, order=2, bits=6, backend=ref")
+    assert full == DraftSpec(grid=4, order=2, n_bits=6, backend="ref")
+    assert DraftSpec.parse("n_bits=6") == DraftSpec(n_bits=6)
+    assert DraftSpec.parse(None) == DraftSpec()
+    assert DraftSpec.parse("") == DraftSpec()
+    # defaults: halved grid (floored at 2), inherited order/bits
+    g, o, b = DraftSpec().resolve(cfg)
+    assert g == max(2, cfg.kan_grid // 2)
+    assert (o, b) == (cfg.kan_order, cfg.kan_n_bits)
+    tiny = dataclasses.replace(cfg, kan_grid=3)
+    assert DraftSpec().resolve(tiny)[0] == 2
+    with pytest.raises(ValueError, match="unknown"):
+        DraftSpec.parse("grids=4")
+    with pytest.raises(ValueError, match="key=value"):
+        DraftSpec.parse("grid:4")
+    with pytest.raises(ValueError, match=">= 1"):
+        DraftSpec(grid=0).resolve(cfg)
+
+
+def test_engine_rejects_inconsistent_spec_kwargs(kan_setup):
+    cfg, params = kan_setup
+    with pytest.raises(ValueError, match="spec_decode"):
+        ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                    spec_decode=2)             # no paged KV
+    with pytest.raises(ValueError, match="draft_spec"):
+        ServeEngine(params, cfg, slots=2, max_len=32, kan_deploy=True,
+                    draft_spec="grid=4", **PAGED)  # spec off
