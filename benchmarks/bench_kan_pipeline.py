@@ -541,6 +541,60 @@ def _bench_sharded(batch: int, repeats: int, serve_requests: int,
     return {"device_count": n, "rows": rows, "serve": serve}
 
 
+def _bench_quant_frontier(print_fn=print, epochs: int = 20) -> dict:
+    """KANtize-style accuracy-vs-bits frontier on the paper's KAN1 geometry.
+
+    One small float base network is trained once on the knot surrogate,
+    then every per-layer bit allocation in the sweep is quantized/deployed
+    from it (mixed-precision ``KANSpec.n_bits`` tuples; <=4-bit layers run
+    int4-packed through the fused kernel) and scored exactly like the
+    co-design search: accuracy on the ``acim`` backend with the measured
+    22nm non-idealities, cost via ``kan_cost`` with bit-dependent cell
+    area/energy.  Rows carry a ``pareto`` flag on (energy_pj, accuracy) —
+    the sub-8-bit allocations trade accuracy for energy, and at least one
+    lands on the front (the (4, 4) corner is the energy argmin by
+    construction).
+    """
+    from repro import tune
+
+    task = tune.make_knot_task(n_train=2048, n_val=256, epochs=epochs,
+                               seed=0, base_grid=5, calib_n=128)
+    allocations = ((8, 8), (8, 4), (4, 8), (4, 4))
+    points = []
+    for alloc in allocations:
+        cand = tune.Candidate(grid_size=5, order=3, n_bits=8,
+                              layer_bits=alloc)
+        metrics = tune.evaluate_candidate(task, cand, acim_seeds=2)
+        points.append(tune.EvaluatedPoint(candidate=cand, metrics=metrics))
+    front = tune.pareto_front(points, ("energy_pj", "accuracy"))
+    rows = []
+    for p in points:
+        row = {
+            "layer_bits": list(p.candidate.layer_bits),
+            "accuracy": p.metrics["accuracy"],
+            "energy_pj": p.metrics["energy_pj"],
+            "area_mm2": p.metrics["area_mm2"],
+            "latency_ns": p.metrics["latency_ns"],
+            "sub8": any(b < 8 for b in p.candidate.layer_bits),
+            "pareto": any(q is p for q in front),
+        }
+        rows.append(row)
+        print_fn(
+            f"quant_frontier,bits={'/'.join(map(str, row['layer_bits']))},"
+            f"accuracy={row['accuracy']:.3f},"
+            f"energy_pj={row['energy_pj']:.1f},"
+            f"area_mm2={row['area_mm2']:.4f},"
+            f"pareto={int(row['pareto'])}"
+        )
+    assert any(r["pareto"] and r["sub8"] for r in rows), rows
+    return {
+        "dims": list(task.dims),
+        "grid": 5,
+        "objectives": ["energy_pj", "accuracy"],
+        "rows": rows,
+    }
+
+
 def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
         serve_max_new: int = 8, sustained_requests: int = 60,
         tuned: bool = False, tile_candidates: int = 10,
@@ -622,6 +676,7 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
                     f"tile_mode={row['tile_mode']},"
                     f"tile_tuned={int(row['tile_tuned'])}")
         print_fn(msg)
+    quant_frontier = _bench_quant_frontier(print_fn=print_fn)
     serve = _bench_serve(serve_requests, serve_max_new, print_fn=print_fn)
     sustained = _bench_sustained(sustained_requests, serve_max_new,
                                  print_fn=print_fn)
@@ -636,6 +691,7 @@ def run(batch: int = 128, repeats: int = 10, serve_requests: int = 4,
         "pallas_interpret": interpret,
         "device_count": len(jax.devices()),
         "rows": rows,
+        "quant_frontier": quant_frontier,
         "serve": serve,
         "sustained": sustained,
         "attention": attention,

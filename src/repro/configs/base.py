@@ -63,6 +63,9 @@ class ModelConfig:
     kan_grid: int = 8
     kan_order: int = 3
     kan_n_bits: int = 8
+    kan_layer_bits: tuple = ()         # per-layer override of kan_n_bits:
+                                       # one width per KANLinear half (mixed
+                                       # precision; () -> uniform kan_n_bits)
     kan_d_hidden: int = 0              # 0 -> d_ff // (kan_grid + kan_order)
     # --- encoder-decoder (whisper)
     encoder_layers: int = 0

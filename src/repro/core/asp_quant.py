@@ -40,6 +40,8 @@ from .bspline import bspline_basis, cardinal_bump
 __all__ = [
     "ASPQuantSpec",
     "max_ld",
+    "resolve_layer_bits",
+    "lut_scale",
     "quantize_input",
     "dequantize_input",
     "build_lut",
@@ -60,6 +62,49 @@ def max_ld(grid_size: int, n_bits: int) -> int:
     while grid_size * 2 ** (ld + 1) <= 2**n_bits:
         ld += 1
     return ld
+
+
+def resolve_layer_bits(n_bits, n_layers: int, grid_size: int) -> tuple:
+    """Normalize a scalar-or-sequence bit width into a per-layer tuple.
+
+    The mixed-precision entry point: every quantization surface that accepts
+    ``n_bits`` as either one int (uniform, the paper's deployment) or a
+    per-layer sequence (KANtize-style mixed precision) funnels through here.
+    Each layer's width must independently satisfy PowerGap (eq. (6)):
+    ``G * 2**LD <= 2**b`` must have a solution, i.e. ``max_ld(G, b) >= 0`` —
+    an invalid allocation raises ``ValueError``, it is NEVER clamped.
+    """
+    if isinstance(n_bits, (int, np.integer)):
+        bits = (int(n_bits),) * n_layers
+    else:
+        bits = tuple(int(b) for b in n_bits)
+        if len(bits) != n_layers:
+            raise ValueError(
+                f"{len(bits)} per-layer bit widths for {n_layers} layers"
+            )
+    for li, b in enumerate(bits):
+        if not 2 <= b <= 16:
+            raise ValueError(f"layer {li}: n_bits={b} outside [2, 16]")
+        if max_ld(grid_size, b) < 0:
+            raise ValueError(
+                f"layer {li}: n_bits={b} is PowerGap-invalid for "
+                f"G={grid_size} (G * 2**LD <= 2**n unsatisfiable, eq. (6))"
+            )
+    return bits
+
+
+def lut_scale(spec: "ASPQuantSpec") -> float:
+    """Dequantization scale of the SH-LUT int codes (``lut ~= lut_q * s``).
+
+    Derivable from the spec alone — bump peak over the code ceiling — so the
+    fused kernel can bake it as a trace-time f32 constant when unpacking
+    int4-packed LUT lanes (bit-exact with the deployed f32 table, which is
+    stored as ``f32(lut_q) * f32(scale)`` whenever ``lut_bits <= 4``).
+    """
+    K = spec.order
+    qmax = 2**spec.lut_bits - 1
+    vmax = cardinal_bump(np.array([(K + 1) / 2.0]), K)[0]
+    return float(vmax / qmax)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,9 +220,7 @@ def build_lut(spec: ASPQuantSpec) -> dict:
     u = np.arange(U, dtype=np.float64) / U
     # active slot d covers bump segment s = K - d  (see kernels/kan_spline).
     lut = np.stack([cardinal_bump(u + (K - d), K) for d in range(K + 1)], axis=1)
-    qmax = 2**spec.lut_bits - 1
-    vmax = cardinal_bump(np.array([(K + 1) / 2.0]), K)[0]  # bump peak
-    scale = vmax / qmax
+    scale = lut_scale(spec)  # bump peak / (2**lut_bits - 1)
     lut_q = np.round(lut / scale).astype(np.int64)
     hemi = hemi_fold(lut_q, spec)
     flat_q = hemi_unfold(hemi, spec)

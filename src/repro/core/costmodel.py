@@ -173,6 +173,9 @@ class LayerGeom:
     rows: int            # word lines (MLP: in_dim; KAN: in_dim*(G+K) + in_dim)
     cols: int            # bit lines (out_dim)
     cells: int           # programmed cells (= params of this layer)
+    cell_bits: int = 8   # weight width stored per crosspoint; <8-bit layers
+                         # pack narrower conductance stacks, so their cell
+                         # area/energy footprint scales by cell_bits/8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,8 +203,14 @@ def accelerator_cost(spec: AcceleratorSpec) -> dict:
         math.ceil(l.rows / spec.array_rows) * spec.array_rows for l in spec.layers
     ]
     rows_total = sum(padded_rows)
-    cells_alloc = sum(pr * l.cols for pr, l in zip(padded_rows, spec.layers))
-    cells_prog = sum(l.cells for l in spec.layers)
+    # bit-dependent cell footprint: a layer stored at cell_bits < 8 programs
+    # proportionally fewer conductance levels per crosspoint (int4 packing
+    # halves the at-rest cell demand), shrinking both the allocated array
+    # area and the per-MAC cell energy.  cell_bits == 8 everywhere degrades
+    # to the original integer counts exactly.
+    cells_alloc = sum(pr * l.cols * (l.cell_bits / 8.0)
+                      for pr, l in zip(padded_rows, spec.layers))
+    cells_prog = sum(l.cells * (l.cell_bits / 8.0) for l in spec.layers)
     phases = _phases(spec)
     adc_area_unit = A_ADC * 2 ** (spec.adc_bits - 8)
     # per-WL drive energy scales with the WL activation window
@@ -267,11 +276,20 @@ def kan_accelerator(
     input_gen: TMDVConfig,
     array_rows: int = ARRAY_ROWS_DEFAULT,
     adc_bits: int = 8,
+    layer_bits: tuple = (),
 ) -> AcceleratorSpec:
+    """``layer_bits``: per-layer weight widths (mixed precision); ``()``
+    costs every layer at the spec's uniform ``n_bits``."""
     nb = spec.num_basis
+    bits = tuple(layer_bits) if layer_bits \
+        else (spec.n_bits,) * (len(dims) - 1)
+    if len(bits) != len(dims) - 1:
+        raise ValueError(
+            f"layer_bits {layer_bits} vs {len(dims) - 1} layers")
     layers = tuple(
-        LayerGeom(rows=i * nb + i, cols=o, cells=i * nb * o + i * o)
-        for i, o in zip(dims[:-1], dims[1:])
+        LayerGeom(rows=i * nb + i, cols=o, cells=i * nb * o + i * o,
+                  cell_bits=min(8, int(b)))
+        for i, o, b in zip(dims[:-1], dims[1:], bits)
     )
     return AcceleratorSpec(
         layers=layers,

@@ -43,13 +43,13 @@ def quantize_kan_ffn(ffn_params: dict, cfg: ModelConfig) -> dict:
     quantization deal (int8 at rest and on the HBM read, decode on the fly)
     — while eager/deploy-time callers get it constant-folded at trace.
     """
-    from ..models.layers import kan_ffn_spec
+    from ..models.layers import kan_ffn_specs
 
-    spec = kan_ffn_spec(cfg)
+    s1, s2 = kan_ffn_specs(cfg)
     l1 = quantize_kan_layer({"c": ffn_params["c1"], "w_b": ffn_params["wb1"]},
-                            spec)
+                            s1)
     l2 = quantize_kan_layer({"c": ffn_params["c2"], "w_b": ffn_params["wb2"]},
-                            spec)
+                            s2)
     return {"l1": l1, "l2": l2}
 
 
@@ -69,13 +69,13 @@ def kan_ffn_apply_quantized(qffn: dict, x: jax.Array, cfg: ModelConfig,
     ``mesh=None`` likewise (``use_mesh`` scope — how the serving engine
     shards every FFN token batch on "data" and hidden channels on "model").
     """
-    from ..models.layers import kan_ffn_spec
+    from ..models.layers import kan_ffn_specs
 
-    spec = kan_ffn_spec(cfg)
+    specs = kan_ffn_specs(cfg)
     b, s, d = x.shape
     hidden = qffn["l1"]["c_q"].shape[-1]
     dep = deploy_kan_ffn_stack(
-        [qffn["l1"], qffn["l2"]], (d, hidden, d), spec, batch=b * s
+        [qffn["l1"], qffn["l2"]], (d, hidden, d), specs, batch=b * s
     )
     x2 = x.reshape(b * s, d).astype(jnp.float32)
     y = kan_network_deploy_apply(

@@ -31,6 +31,7 @@ from .asp_quant import (
     build_lut,
     dense_basis_from_codes,
     quantize_input,
+    resolve_layer_bits,
 )
 from .bspline import bspline_basis
 
@@ -50,24 +51,54 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class KANSpec:
-    """Architecture of a KAN stack: dims + per-layer quantization spec."""
+    """Architecture of a KAN stack: dims + per-layer quantization specs.
+
+    ``n_bits`` is either one int (uniform precision, the paper's deployment)
+    or a per-layer tuple of widths (KANtize-style mixed precision) — one
+    entry per layer, each independently PowerGap-validated.  A layer's
+    ``lut_bits`` is clipped to its input width, so a 4-bit layer stores a
+    4-bit SH-LUT (and the kernel packs two LUT/weight codes per int8 lane,
+    see ``kernels.kan_spline.pipeline``).
+    """
 
     dims: tuple  # e.g. (17, 1, 14)
     grid_size: int = 5
     order: int = 3
-    n_bits: int = 8
+    n_bits: int | tuple = 8
     lut_bits: int = 8
     lo: float = -1.0
     hi: float = 1.0
 
-    def layer_spec(self) -> ASPQuantSpec:
+    def __post_init__(self):
+        if not isinstance(self.n_bits, int):
+            object.__setattr__(
+                self, "n_bits", tuple(int(b) for b in self.n_bits)
+            )
+        # validate eagerly: an invalid per-layer allocation must fail at
+        # construction, not at first deploy
+        self.layer_bits
+
+    @property
+    def layer_bits(self) -> tuple:
+        """Per-layer input bit widths, PowerGap-validated (never clamped)."""
+        return resolve_layer_bits(
+            self.n_bits, len(self.dims) - 1, self.grid_size
+        )
+
+    def layer_spec(self, li: int = 0) -> ASPQuantSpec:
+        b = self.layer_bits[li]
         return ASPQuantSpec(
             grid_size=self.grid_size,
             order=self.order,
-            n_bits=self.n_bits,
-            lut_bits=self.lut_bits,
+            n_bits=b,
+            lut_bits=min(self.lut_bits, b),
             lo=self.lo,
             hi=self.hi,
+        )
+
+    def layer_specs(self) -> tuple:
+        return tuple(
+            self.layer_spec(li) for li in range(len(self.dims) - 1)
         )
 
     @property
@@ -106,8 +137,14 @@ def kan_layer_apply(params, x: jax.Array, spec: ASPQuantSpec) -> jax.Array:
 # ----------------------------------------------------------------------------
 
 
-def quantize_kan_layer(params, spec: ASPQuantSpec):
+def quantize_kan_layer(params, spec: ASPQuantSpec, weight_bits: int | None = None):
     """Post-training quantization of one layer.
+
+    ``weight_bits`` sets the signed weight-code width (symmetric, per output
+    channel): ``qmax = 2**(bits-1) - 1`` (127 at the default 8 bits, 7 at 4).
+    ``None`` derives it from the layer's input width — ``min(8, spec.n_bits)``
+    — so a 4-bit layer stores 4-bit weight codes the fused kernel packs two
+    per int8 lane.
 
     Returns dict:
       c_q: int8 (in, G+K, out), symmetric per-output-channel.
@@ -117,22 +154,32 @@ def quantize_kan_layer(params, spec: ASPQuantSpec):
       lut_q / lut_scale / hemi: quantized table + physical hemi storage.
     """
     entry = build_lut(spec)
+    if weight_bits is None:
+        weight_bits = min(8, spec.n_bits)
+    qmax = 2 ** (int(weight_bits) - 1) - 1
     c = np.asarray(params["c"], np.float64)
     w_b = np.asarray(params["w_b"], np.float64)
 
     def chan_q(w, axis_out):
-        s = np.maximum(np.abs(w).max(axis=tuple(i for i in range(w.ndim) if i != axis_out)), 1e-12) / 127.0
-        q = np.clip(np.round(w / s), -127, 127).astype(np.int8)
+        s = np.maximum(np.abs(w).max(axis=tuple(i for i in range(w.ndim) if i != axis_out)), 1e-12) / qmax
+        q = np.clip(np.round(w / s), -qmax, qmax).astype(np.int8)
         return q, s.astype(np.float32)
 
     c_q, c_scale = chan_q(c, c.ndim - 1)
     w_b_q, w_b_scale = chan_q(w_b, w_b.ndim - 1)
+    if spec.lut_bits <= 4:
+        # int4-packable tables dequantize as f32(code) * f32(scale) — the
+        # exact product the kernel's in-lane unpack computes — instead of
+        # the f64-product-then-cast form (1-ulp divergence risk).
+        lut_f32 = np.float32(entry["lut_q"]) * np.float32(entry["scale"])
+    else:
+        lut_f32 = np.asarray(entry["lut_q"] * entry["scale"], np.float32)
     return {
         "c_q": jnp.asarray(c_q),
         "c_scale": jnp.asarray(c_scale),
         "w_b_q": jnp.asarray(w_b_q),
         "w_b_scale": jnp.asarray(w_b_scale),
-        "lut": jnp.asarray(entry["lut_q"] * entry["scale"], jnp.float32),
+        "lut": jnp.asarray(lut_f32),
         "lut_q": jnp.asarray(entry["lut_q"], jnp.int32),
         "lut_scale": jnp.float32(entry["scale"]),
         "hemi": jnp.asarray(entry["hemi"], jnp.int32),

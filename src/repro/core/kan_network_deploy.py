@@ -24,7 +24,14 @@ import jax.numpy as jnp
 from .asp_quant import ASPQuantSpec
 from .kan_layer import KANSpec, quantize_kan_layer
 from .. import runtime
-from ..kernels.kan_spline.pipeline import PipelinePlan, pad_layer_weights
+from ..kernels.kan_spline.pipeline import (
+    PipelinePlan,
+    pack_layer_weights,
+    pack_lut,
+    packs_lut,
+    packs_weights,
+    pad_layer_weights,
+)
 from ..runtime.executor import default_interpret  # re-export (PR-1 API)
 
 __all__ = [
@@ -43,8 +50,10 @@ __all__ = [
 class DeployedKAN:
     """A quantized KAN stack bound to a pipeline geometry plan.
 
-    layers: tuple of {"lut", "wc", "wb"} with weights already padded to the
-    plan (dequantized f32 — the values the int8 storage decodes to).
+    layers: tuple of per-layer weight dicts, already padded to the plan:
+    {"lut", "wc", "wb"} dequantized f32 for 8-bit layers, or the int4-packed
+    {"lut"[, "lutp"], "wcp", "wscale", "wb"} form for <=4-bit layers (two
+    signed weight codes per int8 lane; the kernel decodes in-lane).
     specs/dims describe the logical network for the runtime backends.
     placement: the mesh this bundle's weights were placed on with
     :func:`place_deployed_kan` (or None).  The runtime resolves it as the
@@ -96,9 +105,16 @@ def place_deployed_kan(dep: DeployedKAN, mesh) -> DeployedKAN:
 
 
 def quantize_kan_network(params_list, kspec: KANSpec):
-    """Post-training-quantize every layer of a KAN stack (host-side)."""
-    spec = kspec.layer_spec()
-    return [quantize_kan_layer(p, spec) for p in params_list]
+    """Post-training-quantize every layer of a KAN stack (host-side).
+
+    Mixed precision rides on the kspec: a per-layer ``n_bits`` tuple gives
+    every layer its own spec (input width, clipped lut_bits, and the
+    matching signed weight-code width via ``quantize_kan_layer``)."""
+    specs = kspec.layer_specs()
+    return [
+        quantize_kan_layer(p, spec)
+        for p, spec in zip(params_list, specs)
+    ]
 
 
 def _dequant_layer(qp: dict) -> tuple:
@@ -110,18 +126,23 @@ def _dequant_layer(qp: dict) -> tuple:
 def deploy_kan_network(
     qparams_list, kspec: KANSpec, *, batch: int = 8
 ) -> DeployedKAN:
-    """Bind a quantized KAN stack (single shared spec) to a pipeline plan."""
-    spec = kspec.layer_spec()
-    specs = tuple(spec for _ in qparams_list)
+    """Bind a quantized KAN stack to a pipeline plan (per-layer specs)."""
+    specs = kspec.layer_specs()
     dims = tuple(kspec.dims)
     return _deploy(qparams_list, dims, specs, batch, residual_raw=False)
 
 
 def deploy_kan_ffn_stack(
-    qparams_list, dims: tuple, spec: ASPQuantSpec, *, batch: int = 8
+    qparams_list, dims: tuple, spec, *, batch: int = 8
 ) -> DeployedKAN:
-    """Bind a KANLinear chain with the raw-input ReLU branch (FFN contract)."""
-    specs = tuple(spec for _ in qparams_list)
+    """Bind a KANLinear chain with the raw-input ReLU branch (FFN contract).
+
+    ``spec``: one ASPQuantSpec (broadcast to every layer) or a per-layer
+    sequence of specs (mixed precision)."""
+    if isinstance(spec, ASPQuantSpec):
+        specs = tuple(spec for _ in qparams_list)
+    else:
+        specs = tuple(spec)
     return _deploy(qparams_list, tuple(dims), specs, batch, residual_raw=True)
 
 
@@ -132,11 +153,23 @@ def _deploy(qparams_list, dims, specs, batch, *, residual_raw) -> DeployedKAN:
                                    residual_raw=residual_raw)
     layers = []
     for qp, lp in zip(qparams_list, plan.layers):
-        wc, wb = _dequant_layer(qp)
-        if wc.shape != (lp.f, lp.spec.num_basis, lp.o):
-            raise ValueError(f"layer weights {wc.shape} != plan {lp}")
-        padded = pad_layer_weights(wc, wb, lp)
-        layers.append({"lut": qp["lut"], **padded})
+        if qp["c_q"].shape != (lp.f, lp.spec.num_basis, lp.o):
+            raise ValueError(
+                f"layer weights {qp['c_q'].shape} != plan {lp}")
+        wb = qp["w_b_q"].astype(jnp.float32) * qp["w_b_scale"]
+        if packs_weights(lp.spec):
+            # <=4-bit layer: keep the weight CODES, two per int8 lane —
+            # the f32 banded matrix never materializes at rest
+            layer = {
+                "lut": qp["lut"],
+                **pack_layer_weights(qp["c_q"], qp["c_scale"], wb, lp),
+            }
+            if packs_lut(lp.spec):
+                layer["lutp"] = pack_lut(qp["lut_q"], lp.spec)
+        else:
+            wc, _ = _dequant_layer(qp)
+            layer = {"lut": qp["lut"], **pad_layer_weights(wc, wb, lp)}
+        layers.append(layer)
     return DeployedKAN(
         plan=plan, layers=tuple(layers), specs=specs, dims=dims,
         residual_raw=residual_raw,
@@ -177,13 +210,13 @@ def kan_network_apply_ref(qparams_list, x: jax.Array, kspec: KANSpec):
     (runtime ``ref`` composition over the un-padded quantized weights)."""
     from ..core.asp_quant import quantize_input
 
-    spec = kspec.layer_spec()
+    specs = kspec.layer_specs()
     logical = []
     for qp in qparams_list:
         wc, wb = _dequant_layer(qp)
         logical.append((qp["lut"], wc, wb))
-    codes = quantize_input(x, spec)
+    codes = quantize_input(x, specs[0])
     return runtime.ref_composition(
-        logical, tuple(spec for _ in qparams_list), codes, None,
+        logical, specs, codes, None,
         residual_raw=False,
     )

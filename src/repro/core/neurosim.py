@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .asp_quant import ASPQuantSpec
+from .asp_quant import ASPQuantSpec, resolve_layer_bits
 from .cim import CIMConfig, cim_matmul
 from .costmodel import accelerator_cost, kan_accelerator
 from .kan_layer import (
@@ -61,16 +61,23 @@ class HardwareConstraints:
 
 
 def kan_cost(dims, grid_size, order, n_bits, input_gen, array_rows=128,
-             adc_bits=8) -> dict:
+             adc_bits=8, layer_bits=()) -> dict:
     """Accelerator cost of one KAN hyperparameter point (area/energy/latency).
 
     The single cost hook shared by the step-1 constraint loop here and the
     Pareto search in ``repro.tune.search``.  Raises ``ValueError`` when G
-    does not fit the bit budget (eq. (6)).
+    does not fit the bit budget (eq. (6)) — for the uniform ``n_bits`` and
+    for every width in a mixed-precision ``layer_bits`` allocation alike.
+    ``layer_bits`` scales each layer's cell area/energy by its weight width
+    (int4-packed layers cost half the 8-bit cell footprint).
     """
     spec = ASPQuantSpec(grid_size=grid_size, order=order, n_bits=n_bits,
                         lut_bits=n_bits, lo=-1.0, hi=1.0)
-    acc = kan_accelerator(dims, spec, input_gen, array_rows, adc_bits)
+    if layer_bits:
+        # per-layer PowerGap validation (raises ValueError, never clamps)
+        resolve_layer_bits(layer_bits, len(dims) - 1, grid_size)
+    acc = kan_accelerator(dims, spec, input_gen, array_rows, adc_bits,
+                          layer_bits=tuple(layer_bits))
     return accelerator_cost(acc)
 
 

@@ -82,14 +82,23 @@ def compress_deployed_kan(dep) -> dict:
 
     layers = []
     for lw in dep.layers:
-        entry = {"lut": np.asarray(jax.device_get(lw["lut"]), np.float32)}
-        for k in ("wc", "wb"):
-            # pure host-side codec (numpy mirror of _quantize): the gather
-            # already brought the leaf to host, so no device round-trip
-            a = np.asarray(jax.device_get(lw[k]), np.float32)
-            s = max(float(np.abs(a).max()), 1e-30) / 127.0
-            q = np.clip(np.round(a / s), -127, 127).astype(np.int8)
-            entry[k] = (q, float(s))
+        entry = {}
+        for k, leaf in lw.items():
+            a = np.asarray(jax.device_get(leaf))
+            if a.dtype == np.int8:
+                # already int4-packed storage ("wcp"/"lutp"): ship verbatim
+                entry[k] = a
+            elif k.startswith("lut") or k == "wscale":
+                # tiny precision anchors: raw f32
+                entry[k] = np.asarray(a, np.float32)
+            else:
+                # pure host-side codec (numpy mirror of _quantize): the
+                # gather already brought the leaf to host, so no device
+                # round-trip
+                a = np.asarray(a, np.float32)
+                s = max(float(np.abs(a).max()), 1e-30) / 127.0
+                q = np.clip(np.round(a / s), -127, 127).astype(np.int8)
+                entry[k] = (q, float(s))
         layers.append(entry)
     return {
         "layers": layers,
@@ -124,10 +133,13 @@ def decompress_deployed_kan(payload: dict, dep, mesh=None):
         )
     layers = []
     for entry in payload["layers"]:
-        lw = {"lut": jnp.asarray(entry["lut"], jnp.float32)}
-        for k in ("wc", "wb"):
-            q, s = entry[k]
-            lw[k] = jnp.asarray(q, jnp.float32) * jnp.float32(s)
+        lw = {}
+        for k, v in entry.items():
+            if isinstance(v, tuple):
+                q, s = v
+                lw[k] = jnp.asarray(q, jnp.float32) * jnp.float32(s)
+            else:
+                lw[k] = jnp.asarray(v)  # raw leaf, dtype preserved
         layers.append(lw)
     out = dataclasses.replace(dep, layers=tuple(layers), placement=None)
     if mesh is not None:

@@ -187,10 +187,14 @@ def deployed_kan_pspecs(dep, mesh):
                 return P(*([None] * (a.ndim - 1) + ["model"]))
             return P(*([None] * a.ndim))
 
+        # key-generic over the deployed forms: SH-LUT leaves ("lut", and the
+        # int4-packed "lutp") replicate; every other leaf — "wc", or the
+        # packed "wcp" + per-channel "wscale" row, and "wb" — carries its
+        # output channels on the last dim and shards them on "model"
         return {
-            "lut": P(*([None] * lw["lut"].ndim)),
-            "wc": col_spec(lw["wc"]),
-            "wb": col_spec(lw["wb"]),
+            k: (P(*([None] * a.ndim)) if k.startswith("lut")
+                else col_spec(a))
+            for k, a in lw.items()
         }
 
     return tuple(one_layer(lw) for lw in dep.layers)

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ...core.asp_quant import ASPQuantSpec
+from ...core.asp_quant import ASPQuantSpec, lut_scale
 
 __all__ = [
     "LayerPlan",
@@ -54,7 +54,14 @@ __all__ = [
     "normalize_tile_overrides",
     "shard_local_plan",
     "validate_plan",
+    "weight_bits",
+    "packs_weights",
+    "packs_lut",
+    "layer_weight_keys",
     "pad_layer_weights",
+    "pack_layer_weights",
+    "pack_lut",
+    "unpacked_wc",
     "run_pipeline_layer",
     "kan_pipeline",
     "kan_pipeline_impl",
@@ -336,6 +343,127 @@ def pad_layer_weights(wc: jax.Array, wb: jax.Array, lp: LayerPlan) -> dict:
 
 
 # ----------------------------------------------------------------------------
+# Sub-8-bit packing (KANtize-style mixed precision)
+# ----------------------------------------------------------------------------
+#
+# A layer whose weight codes fit in 4 bits stores them PACKED: two signed
+# int4 row-codes per int8 lane along the contraction axis (row 2r in the low
+# nibble, row 2r+1 in the high nibble), plus the per-output-channel f32
+# scales — the f32 banded matrix is never materialized at rest, halving the
+# layer's weight residency.  The kernel unpacks inside the banded-MAC
+# contraction with int32 shift arithmetic and multiplies by the scale row in
+# f32 — the exact product the unpacked deployment stores — so packed and
+# unpacked executions are bit-identical.  A <=4-bit SH-LUT likewise packs
+# two unsigned nibbles per lane along the K+1 axis.
+
+
+def weight_bits(spec: ASPQuantSpec) -> int:
+    """Signed weight-code width a layer deploys at (input width, capped 8)."""
+    return min(8, spec.n_bits)
+
+
+def packs_weights(spec: ASPQuantSpec) -> bool:
+    """True when the layer's weight codes int4-pack (two per int8 lane)."""
+    return weight_bits(spec) <= 4
+
+
+def packs_lut(spec: ASPQuantSpec) -> bool:
+    """True when the layer's SH-LUT codes int4-pack."""
+    return spec.lut_bits <= 4
+
+
+def layer_weight_keys(lp: LayerPlan) -> tuple:
+    """The deployed weight-dict keys this layer's plan implies.
+
+    The mesh runner and ``dist.sharding`` derive their per-leaf
+    PartitionSpecs from these (keys starting with "lut" replicate;
+    everything else shards its output-channel dim on "model").
+    """
+    keys = ["lut"]
+    if packs_lut(lp.spec):
+        keys.append("lutp")
+    if packs_weights(lp.spec):
+        keys += ["wcp", "wscale"]
+    else:
+        keys.append("wc")
+    keys.append("wb")
+    return tuple(keys)
+
+
+def _pack_nibbles(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Pair two int code arrays into one int8 lane (lo nibble, hi nibble)."""
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+    return (((hi << 4) & 0xF0) | (lo & 0x0F)).astype(jnp.int8)
+
+
+def _unpack_lo_nibble(p32: jax.Array) -> jax.Array:
+    """Sign-extended low nibble of packed int8 lanes (as int32)."""
+    return jax.lax.shift_right_arithmetic(jax.lax.shift_left(p32, 28), 28)
+
+
+def _unpack_hi_nibble(p32: jax.Array) -> jax.Array:
+    """Sign-extended high nibble of packed int8 lanes (as int32)."""
+    return jax.lax.shift_right_arithmetic(jax.lax.shift_left(p32, 24), 28)
+
+
+def pack_layer_weights(c_q: jax.Array, c_scale: jax.Array,
+                       wb: jax.Array, lp: LayerPlan) -> dict:
+    """int4-pack one layer's spline weight CODES to the plan's geometry.
+
+    c_q: int8 (F, G+K, O) signed codes in [-7, 7] -> "wcp" (Fp*(G+K)//2, Op)
+    with consecutive contraction rows paired per lane; c_scale: (O,) ->
+    "wscale" (1, Op) f32 (padded channels scale 0, so every padded lane
+    still decodes to exactly 0); wb stays dequantized f32 (it is the small
+    residual branch), zero-padded as in :func:`pad_layer_weights`.
+    """
+    nb = lp.spec.num_basis
+    q = jnp.pad(
+        jnp.asarray(c_q, jnp.int8),
+        ((0, lp.fp - lp.f), (0, 0), (0, lp.op - lp.o)),
+    ).reshape(lp.fp * nb, lp.op)
+    wcp = _pack_nibbles(q[0::2], q[1::2])
+    wscale = jnp.pad(
+        jnp.asarray(c_scale, jnp.float32), (0, lp.op - lp.o)
+    )[None, :]
+    wb_p = jnp.pad(
+        wb.astype(jnp.float32), ((0, lp.fp - lp.f), (0, lp.op - lp.o))
+    )
+    return {"wcp": wcp, "wscale": wscale, "wb": wb_p}
+
+
+def pack_lut(lut_q: jax.Array, spec: ASPQuantSpec) -> jax.Array:
+    """Pack the (2**LD, K+1) unsigned SH-LUT codes two-per-lane on K+1.
+
+    Odd K+1 pads one zero column before pairing; the kernel unpacks and
+    slices back to K+1.  Codes are unsigned nibbles (lut_bits <= 4).
+    """
+    kk = spec.order + 1
+    q = jnp.asarray(lut_q, jnp.int32)
+    if kk % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1)))
+    return _pack_nibbles(q[:, 0::2], q[:, 1::2])
+
+
+def unpacked_wc(lw: dict, lp: LayerPlan) -> jax.Array:
+    """The padded f32 banded matrix of a deployed layer, packed or not.
+
+    For packed layers this reproduces the kernel's in-lane decode
+    arithmetic exactly (int32 nibble extract -> f32 code x f32 scale), so
+    jnp consumers (the ref composition, the acim backend's w_lsb / IR-drop
+    paths, bundle compression) see bit-identical weight values.
+    """
+    if "wc" in lw:
+        return lw["wc"].astype(jnp.float32)
+    p32 = lw["wcp"].astype(jnp.int32)
+    half, op = lw["wcp"].shape
+    q = jnp.stack(
+        [_unpack_lo_nibble(p32), _unpack_hi_nibble(p32)], axis=1
+    ).reshape(2 * half, op)
+    return q.astype(jnp.float32) * lw["wscale"].astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------------
 # The fused per-layer kernel (single-layer datapath + fused boundary requant)
 # ----------------------------------------------------------------------------
 
@@ -344,12 +472,21 @@ def _pipeline_layer_kernel(
     *refs,
     lp: LayerPlan,
     has_psum_noise: bool = False,
+    packed_w: bool = False,
+    packed_lut: bool = False,
 ):
     """One KAN layer tile + (optionally) the fused inter-layer requantizer.
 
-    Ref order: codes, [xraw], lut, wc, wb, [psum_noise], y_out, [codes_out].
+    Ref order: codes, [xraw], lut | lutp, wc | (wcp, wscale), wb,
+    [psum_noise], y_out, [codes_out].
     Grid: (Bp/bb, Op/bo, Fp/bf); the F axis (last) is the contraction —
     y_out accumulates across it, the boundary fires on the final step.
+
+    ``packed_w`` / ``packed_lut`` (static, from the deployed dict's keys):
+    the weight / LUT operand arrives as two int4 codes per int8 lane and is
+    unpacked HERE, inside the contraction — int32 nibble extract, then
+    f32 code x f32 scale, the exact product the unpacked deployment stores,
+    so the packed MAC is bit-identical to the unpacked one.
 
     ``psum_noise`` is the ACIM backend's hook: a precomputed (bb, bo) f32
     perturbation (the macro's partial-sum error, already scaled for the
@@ -365,6 +502,9 @@ def _pipeline_layer_kernel(
         xraw_ref = refs[idx]; idx += 1
     lut_ref = refs[idx]; idx += 1
     wc_ref = refs[idx]; idx += 1
+    wscale_ref = None
+    if packed_w:
+        wscale_ref = refs[idx]; idx += 1
     wb_ref = refs[idx]; idx += 1
     noise_ref = None
     if has_psum_noise:
@@ -386,13 +526,27 @@ def _pipeline_layer_kernel(
     g = jax.lax.shift_right_logical(codes, spec.ld)
     local = jax.lax.bitwise_and(codes, n_local - 1)
 
+    if packed_lut:
+        # two unsigned LUT nibbles per lane along K+1: decode with the
+        # trace-time scale constant (== the deployed f32 table's scale)
+        p32 = lut_ref[...].astype(jnp.int32)
+        lo_n = jax.lax.bitwise_and(p32, 0xF)
+        hi_n = jax.lax.bitwise_and(
+            jax.lax.shift_right_logical(p32, 4), 0xF
+        )
+        lut_tile = jnp.stack([lo_n, hi_n], axis=-1).reshape(
+            n_local, 2 * p32.shape[1]
+        )[:, :kk].astype(jnp.float32) * jnp.float32(lut_scale(spec))
+    else:
+        lut_tile = lut_ref[...].astype(jnp.float32)
+
     # --- SH-LUT retrieval as one-hot matmul (2**LD is tiny: <= 32)
     flat_local = local.reshape(bb * bf, 1)
     iota_l = jax.lax.broadcasted_iota(jnp.int32, (bb * bf, n_local), 1)
     onehot = (iota_l == flat_local).astype(jnp.float32)
     lutv = jax.lax.dot_general(
         onehot,
-        lut_ref[...].astype(jnp.float32),
+        lut_tile,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     ).reshape(bb, bf, kk)
@@ -405,9 +559,21 @@ def _pipeline_layer_kernel(
         basis = basis + jnp.where(d == dd, lutv[..., dd][..., None], 0.0)
 
     # --- spline MAC on the MXU
+    if packed_w:
+        # unpack two signed int4 row-codes per lane: row 2r from the low
+        # nibble, row 2r+1 from the high nibble, interleaved back into
+        # contraction order, then decoded against the per-channel scales
+        p32 = wc_ref[...].astype(jnp.int32)
+        half, bo_w = p32.shape
+        wq = jnp.stack(
+            [_unpack_lo_nibble(p32), _unpack_hi_nibble(p32)], axis=1
+        ).reshape(2 * half, bo_w)
+        wc_tile = wq.astype(jnp.float32) * wscale_ref[...].astype(jnp.float32)
+    else:
+        wc_tile = wc_ref[...].astype(jnp.float32)
     acc = jax.lax.dot_general(
         basis.reshape(bb, bf * nb),
-        wc_ref[...].astype(jnp.float32),
+        wc_tile,
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
@@ -454,9 +620,7 @@ def _pipeline_layer_kernel(
 def _run_layer(
     codes: jax.Array,       # (Bp, Fp) int32
     xraw: jax.Array | None,  # (Bp, Fp) f32, only when lp.residual_raw
-    lut: jax.Array,         # (2**LD, K+1)
-    wc_p: jax.Array,        # (Fp * NB, Op)
-    wb_p: jax.Array,        # (Fp, Op)
+    lw: dict,               # deployed layer weights (packed or unpacked)
     lp: LayerPlan,
     bp: int,
     *,
@@ -465,8 +629,18 @@ def _run_layer(
 ):
     spec = lp.spec
     nb = spec.num_basis
+    # packing is a property of the weights ACTUALLY handed in (dict keys are
+    # static pytree structure): the acim backend's IR-drop path substitutes
+    # an unpacked f32 dict for a packed layer and the kernel follows.
+    packed_w = "wcp" in lw
+    packed_lut = "lutp" in lw
     assert codes.shape == (bp, lp.fp), (codes.shape, bp, lp.fp)
-    assert wc_p.shape == (lp.fp * nb, lp.op), (wc_p.shape, lp.fp, nb, lp.op)
+    if packed_w:
+        assert lw["wcp"].shape == (lp.fp * nb // 2, lp.op), (
+            lw["wcp"].shape, lp.fp, nb, lp.op)
+    else:
+        assert lw["wc"].shape == (lp.fp * nb, lp.op), (
+            lw["wc"].shape, lp.fp, nb, lp.op)
 
     grid = (bp // lp.bb, lp.op // lp.bo, lp.fp // lp.bf)
 
@@ -475,14 +649,30 @@ def _run_layer(
     if lp.residual_raw:
         in_specs.append(pl.BlockSpec((lp.bb, lp.bf), lambda i, j, k: (i, k)))
         inputs.append(xraw)
-    in_specs += [
-        pl.BlockSpec(
+    if packed_lut:
+        kk_half = (spec.order + 1 + 1) // 2
+        in_specs.append(pl.BlockSpec(
+            (spec.codes_per_interval, kk_half), lambda i, j, k: (0, 0)
+        ))
+        inputs.append(lw["lutp"])
+    else:
+        in_specs.append(pl.BlockSpec(
             (spec.codes_per_interval, spec.order + 1), lambda i, j, k: (0, 0)
-        ),
-        pl.BlockSpec((lp.bf * nb, lp.bo), lambda i, j, k: (k, j)),
-        pl.BlockSpec((lp.bf, lp.bo), lambda i, j, k: (k, j)),
-    ]
-    inputs += [lut, wc_p, wb_p]
+        ))
+        inputs.append(lw["lut"])
+    if packed_w:
+        # bf >= 8 keeps bf*nb even, so every contraction block owns whole
+        # packed lanes and the (k, j) index map stays contiguous
+        in_specs += [
+            pl.BlockSpec((lp.bf * nb // 2, lp.bo), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, lp.bo), lambda i, j, k: (0, j)),
+        ]
+        inputs += [lw["wcp"], lw["wscale"]]
+    else:
+        in_specs.append(pl.BlockSpec((lp.bf * nb, lp.bo), lambda i, j, k: (k, j)))
+        inputs.append(lw["wc"])
+    in_specs.append(pl.BlockSpec((lp.bf, lp.bo), lambda i, j, k: (k, j)))
+    inputs.append(lw["wb"])
     if psum_noise is not None:
         assert psum_noise.shape == (bp, lp.op), (psum_noise.shape, bp, lp.op)
         in_specs.append(pl.BlockSpec((lp.bb, lp.bo), lambda i, j, k: (i, j)))
@@ -495,7 +685,8 @@ def _run_layer(
         out_shape.append(jax.ShapeDtypeStruct((bp, lp.op), jnp.int32))
 
     kernel = functools.partial(
-        _pipeline_layer_kernel, lp=lp, has_psum_noise=psum_noise is not None
+        _pipeline_layer_kernel, lp=lp, has_psum_noise=psum_noise is not None,
+        packed_w=packed_w, packed_lut=packed_lut,
     )
     outs = pl.pallas_call(
         kernel,
@@ -556,8 +747,7 @@ def kan_pipeline_impl(
         y, nxt_codes = _run_layer(
             h_codes,
             h_raw if lp.residual_raw else None,
-            lw["lut"], lw["wc"], lw["wb"],
-            lp, plan.bp,
+            lw, lp, plan.bp,
             interpret=interpret,
             psum_noise=noise,
         )

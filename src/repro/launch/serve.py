@@ -96,6 +96,14 @@ def main():
              "REPRO_ATTN_BACKEND, then flash on TPU / ref elsewhere",
     )
     ap.add_argument(
+        "--kan-bits", default=None, metavar="BITS",
+        help="with --kan-ffn: per-layer ASP bit widths for the two KANLinear "
+             "halves, e.g. '8,4' (mixed precision; <=4-bit layers deploy "
+             "int4-packed), or one value for uniform width.  A --tuned-"
+             "config artifact's chosen allocation takes precedence; invalid "
+             "PowerGap combinations are rejected at startup",
+    )
+    ap.add_argument(
         "--tuned-config", default=None, metavar="PATH",
         help="repro.tune artifact to deploy: applies its chosen "
              "quantization point to the KAN-FFN config and registers its "
@@ -182,6 +190,14 @@ def main():
     log = obs.get_logger("serve")
 
     cfg = smoke_config(args.arch)
+    # bit-allocation precedence: artifact > --kan-bits CLI > config default
+    if args.kan_bits:
+        bits = tuple(int(b) for b in args.kan_bits.split(","))
+        if len(bits) == 1:
+            cfg = dataclasses.replace(cfg, kan_n_bits=bits[0],
+                                      kan_layer_bits=())
+        else:
+            cfg = dataclasses.replace(cfg, kan_layer_bits=bits)
     tuned_note = ""
     if args.tuned_config:
         from ..tune import apply_tuning_artifact, load_tuning_artifact
@@ -191,9 +207,11 @@ def main():
         cand = resolved["candidate"]
         if cand is not None:
             # the chosen co-design point becomes the KAN-FFN quantization
+            # (including its per-layer mixed-precision allocation, which
+            # overrides any --kan-bits request)
             cfg = dataclasses.replace(
                 cfg, kan_grid=cand.grid_size, kan_order=cand.order,
-                kan_n_bits=cand.n_bits,
+                kan_n_bits=cand.n_bits, kan_layer_bits=cand.layer_bits,
             )
         tuned_note = (
             f" [artifact {args.tuned_config}: task={art.get('task')}, "
@@ -202,6 +220,14 @@ def main():
         )
     if args.kan_ffn:
         cfg = cfg.kan_variant()
+        # fail fast on a PowerGap-invalid bit allocation (reject, not clamp)
+        from ..core.asp_quant import resolve_layer_bits
+
+        try:
+            resolve_layer_bits(cfg.kan_layer_bits or cfg.kan_n_bits, 2,
+                               cfg.kan_grid)
+        except ValueError as e:
+            raise SystemExit(f"invalid KAN bit allocation: {e}")
     if cfg.family in ("audio",):
         raise SystemExit("serve demo supports decoder-only archs")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -255,6 +281,8 @@ def main():
     if args.kan_ffn:
         log.info("kan-ffn", G=cfg.kan_grid, K=cfg.kan_order,
                  n_bits=cfg.kan_n_bits,
+                 layer_bits=("uniform" if not cfg.kan_layer_bits
+                             else ",".join(map(str, cfg.kan_layer_bits))),
                  plan_source=engine.kan_plan_source() + tuned_note)
 
     metrics_server = None

@@ -533,11 +533,32 @@ def init_ffn(key, cfg: ModelConfig):
     raise ValueError(cfg.ffn_kind)
 
 
-def kan_ffn_spec(cfg: ModelConfig) -> ASPQuantSpec:
-    return ASPQuantSpec(
-        grid_size=cfg.kan_grid, order=cfg.kan_order, n_bits=cfg.kan_n_bits,
-        lut_bits=cfg.kan_n_bits, lo=-1.0, hi=1.0,
+def kan_ffn_specs(cfg: ModelConfig) -> tuple:
+    """Per-half ASPQuantSpecs of a KAN-FFN block (the d -> h -> d pair).
+
+    ``cfg.kan_layer_bits`` (when set: one width per half) overrides the
+    uniform ``cfg.kan_n_bits`` — KANtize-style mixed precision, PowerGap-
+    validated per half; each half's lut_bits is clipped to its input width.
+    """
+    from ..core.asp_quant import resolve_layer_bits
+
+    bits = resolve_layer_bits(
+        cfg.kan_layer_bits if cfg.kan_layer_bits else cfg.kan_n_bits,
+        2, cfg.kan_grid,
     )
+    return tuple(
+        ASPQuantSpec(
+            grid_size=cfg.kan_grid, order=cfg.kan_order, n_bits=b,
+            lut_bits=min(cfg.kan_n_bits, b), lo=-1.0, hi=1.0,
+        )
+        for b in bits
+    )
+
+
+def kan_ffn_spec(cfg: ModelConfig) -> ASPQuantSpec:
+    """First-half spec (uniform deployments: THE spec; kept for callers
+    that only need the bit-independent grid geometry)."""
+    return kan_ffn_specs(cfg)[0]
 
 
 def kan_ffn_hidden(cfg: ModelConfig) -> int:

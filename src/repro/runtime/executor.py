@@ -5,7 +5,9 @@ Every execution surface (``kan_network_apply(quantized=True)``,
 ``launch.serve``) resolves its backend here instead of carrying its own
 ``backend=`` strings and ``default_interpret()`` probes.  Three registered
 backends run the same deployed bundle (duck-typed: ``.dims``, ``.specs``,
-``.layers`` (padded {"lut","wc","wb"}), ``.residual_raw``):
+``.layers`` (padded {"lut","wc","wb"}, or the int4-packed
+{"lut"[,"lutp"],"wcp","wscale","wb"} form for <=4-bit layers),
+``.residual_raw``):
 
   * ``"ref"``    — the layered jnp composition (moved here from
                    ``kan_network_apply_ref``): per-layer SH-LUT dense basis,
@@ -58,6 +60,8 @@ from ..kernels.kan_spline.pipeline import (
     kan_pipeline_impl,
     run_pipeline_layer,
     shard_local_plan,
+    unpacked_wc,
+    weight_bits,
 )
 from .meshexec import (
     build_sharded_runner,
@@ -191,9 +195,14 @@ def _entry_codes(dep, x, xraw):
 
 
 def _logical_layer(lw: dict, lp) -> tuple:
-    """Slice one padded deployed layer back to its logical (lut, wc, wb)."""
+    """Slice one padded deployed layer back to its logical (lut, wc, wb).
+
+    int4-packed layers decode through ``unpacked_wc`` first — the same
+    nibble-extract + f32 scale product the kernel computes in-lane, so the
+    ref composition stays the bit-exactness oracle for packed layers too.
+    """
     nb = lp.spec.num_basis
-    wc = lw["wc"].reshape(lp.fp, nb, lp.op)[: lp.f, :, : lp.o]
+    wc = unpacked_wc(lw, lp).reshape(lp.fp, nb, lp.op)[: lp.f, :, : lp.o]
     wb = lw["wb"][: lp.f, : lp.o]
     return lw["lut"], wc, wb
 
@@ -311,7 +320,7 @@ class _CachedExecutor:
         def layer_fn(li, lp, lw, h_codes, h_raw, psum_noise):
             return run_pipeline_layer(
                 h_codes, h_raw if lp.residual_raw else None,
-                lw["lut"], lw["wc"], lw["wb"], lp, local_plan.bp,
+                lw, lp, local_plan.bp,
                 interpret=key.interpret, psum_noise=psum_noise,
             )
         return layer_fn
@@ -421,7 +430,7 @@ def _ref_padded_layer(lp, lw, codes, xraw, psum_noise=None):
     basis = dense_basis_from_codes(codes, lw["lut"], spec)
     y = jax.lax.dot_general(
         basis.reshape(b, lp.fp * spec.num_basis),
-        lw["wc"].astype(jnp.float32),
+        unpacked_wc(lw, lp),
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
@@ -606,7 +615,7 @@ class ACIMExecutor(_CachedExecutor):
                      return_intermediates=return_intermediates)
 
     def _statics(self, key: PlanKey) -> tuple:
-        """(cfg, sam_perms, has_input_noise, has_psum, x_max) from the key."""
+        """(cfg, sam_perms, has_input_noise, has_psum) from the key."""
         cfg = key.flags[1]
         sam_perms = None
         if len(key.flags) >= 4 and key.flags[2] == "sam":
@@ -616,8 +625,24 @@ class ACIMExecutor(_CachedExecutor):
             tm.sigma_v > 0.0 or tm.sigma_t > 0.0
         )
         has_psum = (not cfg.deterministic) and cfg.sigma_ps_ref > 0.0
-        x_max = float(2 ** key.specs[0].lut_bits - 1)
-        return cfg, sam_perms, has_input_noise, has_psum, x_max
+        return cfg, sam_perms, has_input_noise, has_psum
+
+    @staticmethod
+    def _layer_psum_std(cfg, lp, lw):
+        """Per-channel partial-sum sigma of one layer, at ITS bit widths.
+
+        ``x_max`` is the layer's LUT code ceiling (2**lut_bits - 1) and the
+        per-channel weight LSB divides by the layer's signed weight-code
+        ceiling (2**(w_bits-1) - 1, so a 4-bit layer's max |code| is 7 —
+        its LSB, and hence its partial-sum error, is correspondingly
+        coarser).  Packed layers decode through ``unpacked_wc`` first.
+        """
+        x_max = float(2 ** lp.spec.lut_bits - 1)
+        w_qmax = float(2 ** (weight_bits(lp.spec) - 1) - 1)
+        w_lsb = jnp.max(jnp.abs(unpacked_wc(lw, lp)), axis=0) / w_qmax
+        lut_lsb = jnp.max(lw["lut"]) / x_max
+        return (cfg.sigma_ps() * np.sqrt(_n_arrays(lp, cfg))
+                * x_max * lut_lsb) * w_lsb
 
     def _row_gains(self, key: PlanKey, plan) -> tuple:
         cfg, sam_perms, *_ = self._statics(key)
@@ -638,7 +663,11 @@ class ACIMExecutor(_CachedExecutor):
 
         def layer_fn(li, lp, lw, h_codes, h_raw, psum_noise):
             if row_gains[li] is not None:
-                lw = {**lw, "wc": lw["wc"] * jnp.asarray(row_gains[li])}
+                # gains break the uniform per-channel scale: decode packed
+                # layers to the f32 operand before applying them (mirrors
+                # the local path)
+                wc = unpacked_wc(lw, lp) * jnp.asarray(row_gains[li])
+                lw = {"lut": lw["lut"], "wc": wc, "wb": lw["wb"]}
             return base_fn(li, lp, lw, h_codes, h_raw, psum_noise)
 
         return layer_fn
@@ -658,7 +687,7 @@ class ACIMExecutor(_CachedExecutor):
         and the per-channel ``w_lsb`` computed from the local column slab
         matches the same columns of the global weight matrix.
         """
-        cfg, _, has_input_noise, has_psum, x_max = self._statics(key)
+        cfg, _, has_input_noise, has_psum = self._statics(key)
         if not (has_input_noise or has_psum):
             return None
         spec0 = key.specs[0]
@@ -677,10 +706,7 @@ class ACIMExecutor(_CachedExecutor):
                 return codes, None
             noises = []
             for li, (lp, lw) in enumerate(zip(local_plan.layers, layers)):
-                w_lsb = jnp.max(jnp.abs(lw["wc"]), axis=0) / 127.0
-                lut_lsb = jnp.max(lw["lut"]) / x_max
-                std = (cfg.sigma_ps() * np.sqrt(_n_arrays(lp, cfg))
-                       * x_max * lut_lsb) * w_lsb
+                std = self._layer_psum_std(cfg, lp, lw)
                 k, k_ps = jax.random.split(k)
                 if ctx.layer_sharded[li]:
                     k_ps = jax.random.fold_in(k_ps, ctx.model_index)
@@ -691,7 +717,7 @@ class ACIMExecutor(_CachedExecutor):
         return noise_fn
 
     def _build_local(self, key: PlanKey):
-        cfg, sam_perms, has_input_noise, has_psum, x_max = self._statics(key)
+        cfg, sam_perms, has_input_noise, has_psum = self._statics(key)
         plan = PLAN_CACHE.plan(key.bucket, key.dims, key.specs,
                                residual_raw=key.residual_raw)
         spec0 = key.specs[0]
@@ -711,22 +737,26 @@ class ACIMExecutor(_CachedExecutor):
             acim_layers = []
             noises = [] if has_psum else None
             for li, (lp, lw) in enumerate(zip(plan.layers, layers)):
-                wc = lw["wc"]
                 if has_psum:
-                    # per-channel weight LSB recovered from the dequantized
-                    # int8 storage (max |w| maps to code 127); padded output
+                    # per-channel weight LSB recovered from the int-code
+                    # storage at the layer's own bit widths; padded output
                     # channels have zero weights -> zero sigma, keeping the
                     # padded lanes noiseless.
-                    w_lsb = jnp.max(jnp.abs(wc), axis=0) / 127.0
-                    lut_lsb = jnp.max(lw["lut"]) / x_max
-                    std = (cfg.sigma_ps() * np.sqrt(_n_arrays(lp, cfg))
-                           * x_max * lut_lsb) * w_lsb
+                    std = self._layer_psum_std(cfg, lp, lw)
                     noise_key, k_ps = jax.random.split(noise_key)
                     noises.append(std[None, :] * jax.random.normal(
                         k_ps, (plan.bp, lp.op), jnp.float32))
                 if row_gains[li] is not None:
-                    wc = wc * jnp.asarray(row_gains[li])
-                acim_layers.append({**lw, "wc": wc})
+                    # the per-row conductance gains break the uniform
+                    # per-channel scale, so a packed layer falls back to
+                    # the unpacked f32 operand for this noisy program
+                    # (quiet configs never reach here: same keys, same
+                    # packed kernel as "pallas")
+                    wc = unpacked_wc(lw, lp) * jnp.asarray(row_gains[li])
+                    acim_layers.append(
+                        {"lut": lw["lut"], "wc": wc, "wb": lw["wb"]})
+                else:
+                    acim_layers.append(lw)
             return kan_pipeline_impl(
                 codes, xraw, tuple(acim_layers), plan,
                 interpret=key.interpret,

@@ -196,16 +196,22 @@ def build_sharded_runner(mesh, *, local_plan, layer_sharded, residual_raw,
     mname = "model" if "model" in axis_names else None
     n_layers = len(local_plan.layers)
 
+    from ..kernels.kan_spline.pipeline import layer_weight_keys
+
     in_specs = [P(dname, None)]
     if residual_raw:
         in_specs.append(P(dname, None))
+    # per-leaf specs follow each layer's ACTUAL deployed keys: SH-LUT leaves
+    # (f32 or int4-packed) replicate; weight leaves — unpacked "wc", packed
+    # "wcp" + its per-channel "wscale" row, and "wb" — shard their
+    # output-channel (last) dim on "model" wherever the layer shards
     in_specs.append(tuple(
         {
-            "lut": P(None, None),
-            "wc": P(None, mname if sharded else None),
-            "wb": P(None, mname if sharded else None),
+            k: (P(None, None) if k.startswith("lut")
+                else P(None, mname if sharded else None))
+            for k in layer_weight_keys(lp)
         }
-        for sharded in layer_sharded
+        for lp, sharded in zip(local_plan.layers, layer_sharded)
     ))
     if noise_fn is not None:
         in_specs.append(P(None))

@@ -674,11 +674,11 @@ class ServeEngine:
         """
         if self.cfg.ffn_kind != "kan":
             return None
-        from ..models.layers import kan_ffn_hidden, kan_ffn_spec
+        from ..models.layers import kan_ffn_hidden, kan_ffn_specs
 
-        spec = kan_ffn_spec(self.cfg)
+        specs = kan_ffn_specs(self.cfg)
         d = self.cfg.d_model
         ov = runtime.PLAN_CACHE.get_tile_overrides(
-            (d, kan_ffn_hidden(self.cfg), d), (spec, spec), True
+            (d, kan_ffn_hidden(self.cfg), d), specs, True
         )
         return "tuned" if ov is not None else "heuristic"

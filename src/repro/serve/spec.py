@@ -169,6 +169,7 @@ class DraftModel:
         # target's layer geometry (only the per-edge basis shrinks)
         self.cfg = dataclasses.replace(
             cfg, kan_grid=grid, kan_order=order, kan_n_bits=n_bits,
+            kan_layer_bits=(),  # drafter is uniform: drop target's mixed bits
             kan_d_hidden=kan_ffn_hidden(cfg),
         )
         self.spec = spec

@@ -180,7 +180,8 @@ def deploy_candidate(task: KnotTask, cand: Candidate):
     """
     kspec_c = KANSpec(
         dims=task.dims, grid_size=cand.grid_size, order=cand.order,
-        n_bits=cand.n_bits, lut_bits=cand.n_bits,
+        n_bits=cand.layer_bits if cand.layer_bits else cand.n_bits,
+        lut_bits=cand.n_bits,
     )
     base_spec = task.base_kspec.layer_spec()
     spec_c = kspec_c.layer_spec()
@@ -203,17 +204,18 @@ def _sam_perms(task: KnotTask, cand: Candidate, dep, kspec: KANSpec,
     the dequantized boundary codes an ideal (quantized, noise-free) pass
     emits — the same activation statistics the deployed chip would profile.
     """
-    spec = kspec.layer_spec()
+    specs = kspec.layer_specs()
     _, codes = kan_network_deploy_apply(
         dep, task.calib_x, backend="ref", interpret=interpret,
         return_intermediates=True,
     )
     layer_inputs = [task.calib_x]
-    for c in codes:
-        layer_inputs.append(dequantize_input(c, spec))
+    for li, c in enumerate(codes):
+        # boundary codes are emitted at the NEXT layer's input width
+        layer_inputs.append(dequantize_input(c, specs[li + 1]))
     perms = []
     for li, f in enumerate(task.dims[:-1]):
-        rw = row_activation_weight(layer_inputs[li], spec, f)
+        rw = row_activation_weight(layer_inputs[li], specs[li], f)
         perms.append(tuple(int(i) for i in
                            sam_permutation(rw, cand.array_rows)))
     return tuple(perms)
@@ -247,6 +249,7 @@ def evaluate_candidate(
         task.dims if task is not None else tuple(dims),
         cand.grid_size, cand.order, cand.n_bits,
         cand.input_gen(), cand.array_rows, cand.adc_bits,
+        layer_bits=cand.layer_bits,
     ))
     if task is None:
         return metrics

@@ -43,15 +43,35 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One co-design operating point (hashable; the search's genotype)."""
+    """One co-design operating point (hashable; the search's genotype).
+
+    ``layer_bits`` is the mixed-precision axis (KANtize-style): one ASP bit
+    width per layer, each independently PowerGap-checked against
+    ``grid_size``; ``()`` means uniform ``n_bits``.  Layers at <= 4 bits
+    deploy int4-packed (two weight codes per int8 lane) and are costed at
+    the narrower cell footprint.
+    """
 
     grid_size: int = 5
     order: int = 3
     n_bits: int = 8
+    layer_bits: tuple = ()
     voltage_bits: int = 4
     array_rows: int = 128
     adc_bits: int = 8
     use_sam: bool = False
+
+    def __post_init__(self):
+        # JSON round trips (artifacts) hand lists back; keep it hashable
+        if not isinstance(self.layer_bits, tuple):
+            object.__setattr__(self, "layer_bits",
+                               tuple(int(b) for b in self.layer_bits))
+
+    def bits_for(self, n_layers: int) -> tuple:
+        """Resolved per-layer widths (uniform ``n_bits`` when unset)."""
+        if self.layer_bits:
+            return self.layer_bits
+        return (self.n_bits,) * n_layers
 
     def spec(self, lo: float = -1.0, hi: float = 1.0) -> ASPQuantSpec:
         """The ASP quantization grid this point deploys with."""
@@ -100,6 +120,11 @@ class DesignSpace:
     grid_size: tuple = (3, 5, 8, 12)
     order: tuple = (3,)
     n_bits: tuple = (8,)
+    # per-layer bit allocations (whole tuples are the choices); () = uniform.
+    # NOTE: mixed allocations must be PowerGap-valid against the sampled
+    # grid_size — ``sample``/``neighbors`` REJECT invalid combinations
+    # (never clamp), so e.g. (4, 8) with grid_size 32 simply never appears.
+    layer_bits: tuple = ((),)
     voltage_bits: tuple = (2, 3, 4, 5, 6)
     array_rows: tuple = (128, 256)
     adc_bits: tuple = (8,)
@@ -119,12 +144,18 @@ class DesignSpace:
 
     def is_valid(self, cand: Candidate) -> bool:
         """Structural validity (independent of space membership)."""
-        if cand.voltage_bits < 0 or cand.voltage_bits > cand.n_bits:
-            return False
         if cand.order < 1 or cand.grid_size < 1:
             return False
-        # PowerGap: G * 2**LD <= 2**n with LD >= 0 (paper eq. (6))
-        return max_ld(cand.grid_size, cand.n_bits) >= 0
+        # every deployed width — mixed per-layer or the uniform n_bits —
+        # must satisfy PowerGap: G * 2**LD <= 2**n with LD >= 0 (eq. (6)),
+        # and the TM-DV split cannot exceed the narrowest layer's width
+        widths = (cand.n_bits,) + tuple(cand.layer_bits)
+        for b in widths:
+            if b < 2 or b > 16 or max_ld(cand.grid_size, b) < 0:
+                return False
+        if cand.voltage_bits < 0 or cand.voltage_bits > min(widths):
+            return False
+        return True
 
     def contains(self, cand: Candidate) -> bool:
         return all(getattr(cand, name) in choices

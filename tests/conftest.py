@@ -1,17 +1,25 @@
-"""Shared test config; makes ``hypothesis`` optional.
+"""Shared test config: hypothesis fallback + the golden-parity harness.
 
-With ``hypothesis`` installed (see requirements-dev.txt) the property-based
-tests run as written.  On a bare interpreter a small deterministic shim is
-registered under the ``hypothesis`` / ``hypothesis.strategies`` module names
-BEFORE the test modules import them: each ``@given`` test then runs a fixed
-number of cases sampled from a per-test seeded RNG, so the four
-property-based modules (test_asp_quant, test_bspline, test_kernels_cim_mac,
-test_kernels_kan_spline) still collect and exercise their invariants.
+Two roles:
 
-The shim implements only what this suite uses — ``given``, ``settings``,
-``strategies.integers``, ``strategies.sampled_from`` (plus a few cheap
-extras) — and is deliberately deterministic: same test name, same cases.
-Set ``HYPOTHESIS_SHIM_MAX_EXAMPLES`` to change the per-test case budget.
+  * makes ``hypothesis`` optional.  With ``hypothesis`` installed (see
+    requirements-dev.txt) the property-based tests run as written; on a
+    bare interpreter a small deterministic shim is registered under the
+    ``hypothesis`` / ``hypothesis.strategies`` module names BEFORE the test
+    modules import them — each ``@given`` test then runs a fixed number of
+    cases from a per-test seeded RNG.  The shim implements only what this
+    suite uses (``given``, ``settings``, ``strategies.integers``,
+    ``strategies.sampled_from`` plus a few cheap extras).  Set
+    ``HYPOTHESIS_SHIM_MAX_EXAMPLES`` to change the per-test case budget.
+
+  * the shared **golden-parity harness**: one deployed KAN1 bundle per bit
+    allocation with its expected output + boundary codes captured ONCE on
+    the unsharded fused pipeline (``golden_parity`` fixture), plus the
+    ``run_pair`` / ``assert_bit_exact`` helpers and the idempotent
+    ``acim-quiet`` backend registration that test_runtime / test_kvpool /
+    test_spec_decode / test_mixed_precision all share (import them with
+    ``from conftest import ...``).  The serving suites also share one
+    session-scoped qwen2.5-14b KAN-FFN param tree (``kan_setup``).
 """
 
 from __future__ import annotations
@@ -121,3 +129,139 @@ except ImportError:
     )
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# ----------------------------------------------------------------------------
+# pytest config
+# ----------------------------------------------------------------------------
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running suite (kept in CI; deselect locally with "
+        '-m "not slow")',
+    )
+
+
+# ----------------------------------------------------------------------------
+# golden-parity harness (shared by the runtime/serving/mixed-precision suites)
+# ----------------------------------------------------------------------------
+
+# the (backend, bits) grid the parity tests sweep; mesh cells are built per
+# test from the host's device count.  8 = the uniform legacy deployment,
+# (8, 4)/(4, 4) = mixed / fully sub-8-bit int4-packed allocations.
+GOLDEN_BITS = (8, (8, 4), (4, 4))
+GOLDEN_BACKENDS = ("ref", "pallas", "acim-quiet")
+
+
+def ensure_quiet_acim_backend() -> str:
+    """Idempotently register the zero-noise acim executor as "acim-quiet".
+
+    Quiet acim traces the same program as "pallas" (every non-ideality
+    zeroed and compiled out), so its streams take part in every
+    bit-identity acceptance.  Returns the backend name.
+    """
+    from repro import runtime
+    from repro.runtime.executor import ACIMExecutor
+
+    if "acim-quiet" not in runtime.available_backends():
+        runtime.register_executor(
+            "acim-quiet", ACIMExecutor(cim=runtime.quiet_cim_config())
+        )
+    return "acim-quiet"
+
+
+def kan1_bundle(n_bits=8, batch=8, seed=0, grid=5):
+    """Deploy the paper's KAN1 geometry at a (possibly mixed) bit allocation.
+
+    Returns (kspec, qparams, dep).  ``n_bits`` may be an int or a per-layer
+    tuple; layers at <= 4 bits deploy int4-packed.
+    """
+    import jax as _jax
+
+    from repro.core.kan_layer import KANSpec, init_kan_network
+    from repro.core.kan_network_deploy import (
+        deploy_kan_network,
+        quantize_kan_network,
+    )
+
+    kspec = KANSpec(dims=(17, 1, 14), grid_size=grid, n_bits=n_bits)
+    key = _jax.random.PRNGKey(seed)
+    qparams = quantize_kan_network(init_kan_network(key, kspec), kspec)
+    dep = deploy_kan_network(qparams, kspec, batch=batch)
+    return kspec, qparams, dep
+
+
+def run_pair(dep, x, mesh, backend="pallas", **kw):
+    """(unsharded pallas, sharded ``backend``) outputs + boundary codes."""
+    from repro.core.kan_network_deploy import kan_network_deploy_apply
+
+    y0, c0 = kan_network_deploy_apply(
+        dep, x, interpret=True, backend="pallas", return_intermediates=True
+    )
+    y1, c1 = kan_network_deploy_apply(
+        dep, x, interpret=True, backend=backend, mesh=mesh,
+        return_intermediates=True, **kw
+    )
+    return (y0, c0), (y1, c1)
+
+
+def assert_bit_exact(a, b):
+    """Both (y, codes) pairs agree bitwise — outputs AND boundary codes."""
+    import numpy as np
+
+    (y0, c0), (y1, c1) = a, b
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y0))
+    assert len(c0) == len(c1)
+    for x0, x1 in zip(c0, c1):
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x0))
+
+
+import pytest  # noqa: E402  (after the shim install, by design)
+
+
+@pytest.fixture(scope="session")
+def kan_setup():
+    """One qwen2.5-14b KAN-FFN smoke config + param tree for the serving
+    suites (params are immutable jax arrays — safe to share)."""
+    import jax as _jax
+
+    from repro.configs.registry import smoke_config
+    from repro.models.model import init_params
+
+    cfg = smoke_config("qwen2.5-14b").kan_variant()
+    return cfg, init_params(_jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="session")
+def golden_parity():
+    """The golden-parity table: bits -> one deployed bundle + its expected
+    output and boundary codes, captured once on the unsharded fused
+    pipeline.  Every (backend, mesh, bits) parity cell replays against
+    THESE arrays, so any backend- or mesh-dependent divergence shows up as
+    a bitwise diff against a single source of truth.
+    """
+    import jax as _jax
+    import numpy as np
+
+    from repro.core.kan_network_deploy import kan_network_deploy_apply
+
+    table = {}
+    for bits in GOLDEN_BITS:
+        kspec, qparams, dep = kan1_bundle(n_bits=bits, batch=16)
+        x = _jax.random.uniform(_jax.random.PRNGKey(3), (13, 17),
+                                minval=-1.0, maxval=1.0)
+        y, codes = kan_network_deploy_apply(
+            dep, x, interpret=True, backend="pallas",
+            return_intermediates=True,
+        )
+        table[bits] = {
+            "kspec": kspec,
+            "qparams": qparams,
+            "dep": dep,
+            "x": x,
+            "y": np.asarray(y),
+            "codes": tuple(np.asarray(c) for c in codes),
+        }
+    return table

@@ -11,6 +11,9 @@ from repro.configs.registry import ARCHS, smoke_config
 from repro.models.model import forward, init_params, loss_fn
 from repro.train.optimizer import adamw, apply_updates
 
+# top-3 slowest tier-1 suite: kept in CI, deselectable locally
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, key, b=2, s=16):
     batch = {

@@ -21,10 +21,7 @@ import random
 import jax
 import pytest
 
-from repro import runtime
-from repro.configs.registry import smoke_config
-from repro.models.model import init_params
-from repro.runtime.executor import ACIMExecutor
+from conftest import ensure_quiet_acim_backend
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kvpool import (
     SCRATCH_BLOCK,
@@ -33,17 +30,10 @@ from repro.serve.kvpool import (
     hash_token_blocks,
 )
 
-# zero-noise acim: traces the same program as "pallas", so its greedy
-# streams take part in the bit-identity acceptance (test_scheduler idiom)
-runtime.register_executor(
-    "acim-quiet", ACIMExecutor(cim=runtime.quiet_cim_config())
-)
-
-
-@pytest.fixture(scope="module")
-def kan_setup():
-    cfg = smoke_config("qwen2.5-14b").kan_variant()
-    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+# zero-noise acim (conftest harness): traces the same program as "pallas",
+# so its greedy streams take part in the bit-identity acceptance; the
+# shared session-scoped ``kan_setup`` fixture also lives in conftest
+ensure_quiet_acim_backend()
 
 
 def make_reqs(cfg, n=2, plen=5, max_new=3, seed=42, prefix=()):

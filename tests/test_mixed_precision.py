@@ -1,0 +1,261 @@
+"""Mixed-precision ASP quantization: properties + the golden-parity sweep.
+
+Three layers of guarantees for the sub-8-bit (KANtize-style) deployment:
+
+  * property-based invariants over bit widths 4..8 — PowerGap (eq. (6))
+    acceptance is exact (``resolve_layer_bits`` accepts a width iff
+    ``G * 2**LD <= 2**n`` is satisfiable, NEVER clamps, and names the
+    offending layer), the ASP quantize->dequantize round-trip error is
+    bounded by one code step and pointwise monotone in bits (the code
+    grids are nested: +1 bit halves ``code_step`` at fixed G), and the
+    int4 nibble codec round-trips signed codes exactly;
+  * the packed banded MAC is bit-exact against an UNPACKED reference per
+    layer: re-materializing any single packed layer's f32 banded matrix
+    (via the kernel's own in-lane decode arithmetic) and re-running the
+    fused pipeline must not move one bit of the output or any boundary
+    code;
+  * the golden-parity sweep: every (backend x mesh x bits) cell replays
+    the conftest ``golden_parity`` bundles against the captured
+    single-source-of-truth arrays — outputs and boundary codes bitwise.
+
+``REPRO_TEST_BITS`` (CI matrix knob) restricts the sweep's bit cells:
+``int8`` runs the uniform legacy allocation only, ``mixed48`` the
+sub-8-bit allocations only; unset runs all of ``GOLDEN_BITS``.
+"""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import (
+    GOLDEN_BACKENDS,
+    GOLDEN_BITS,
+    assert_bit_exact,
+    ensure_quiet_acim_backend,
+    kan1_bundle,
+)
+from repro.core.asp_quant import (
+    ASPQuantSpec,
+    dequantize_input,
+    max_ld,
+    quantize_input,
+    resolve_layer_bits,
+)
+from repro.core.kan_network_deploy import kan_network_deploy_apply
+from repro.kernels.kan_spline import pipeline as pl
+
+ensure_quiet_acim_backend()
+
+_N_DEV = len(jax.devices())
+
+
+# ----------------------------------------------------------------------------
+# PowerGap validity invariants (eq. (6)) — accept iff satisfiable, never clamp
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=st.integers(1, 40), b=st.integers(2, 16))
+def test_powergap_accept_iff_satisfiable(g, b):
+    """resolve_layer_bits accepts a width exactly when eq. (6) has a
+    solution, and a valid width comes back verbatim (uniform broadcast)."""
+    if max_ld(g, b) >= 0:
+        assert resolve_layer_bits(b, 3, g) == (b, b, b)
+    else:
+        with pytest.raises(ValueError, match="PowerGap-invalid"):
+            resolve_layer_bits(b, 3, g)
+
+
+@settings(max_examples=24, deadline=None)
+@given(
+    b1=st.integers(4, 8),
+    b2=st.integers(4, 8),
+    g=st.sampled_from([3, 5, 7, 11, 16]),
+)
+def test_powergap_mixed_tuple_roundtrips_exactly(b1, b2, g):
+    """A valid per-layer allocation is returned bit-for-bit — resolution is
+    normalization, never adjustment."""
+    assert resolve_layer_bits((b1, b2), 2, g) == (b1, b2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(4, 8))
+def test_powergap_invalid_layer_is_named_not_clamped(b):
+    """G = 2**b + 1 cannot fit width b (G * 2**0 > 2**b): the error names
+    the offending layer and no clamped tuple ever escapes."""
+    g = 2**b + 1
+    assert max_ld(g, 16) >= 0  # the 16-bit layer alone would be fine
+    with pytest.raises(ValueError, match=f"layer 1: n_bits={b}"):
+        resolve_layer_bits((16, b), 2, g)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 4), m=st.integers(1, 4))
+def test_layer_count_mismatch_rejected(n, m):
+    bits = (8,) * n
+    if n == m:
+        assert resolve_layer_bits(bits, m, 5) == bits
+    else:
+        with pytest.raises(ValueError, match="per-layer bit widths"):
+            resolve_layer_bits(bits, m, 5)
+
+
+# ----------------------------------------------------------------------------
+# quantize -> dequantize round-trip error: bounded, monotone in bits
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), g=st.sampled_from([3, 5, 7]))
+def test_roundtrip_error_bounded_and_monotone_in_bits(seed, g):
+    """At fixed G every +1 bit halves code_step with the same origin, so
+    the code grids are nested and the round-trip error is POINTWISE
+    non-increasing in bits; the max error is bounded by one code step
+    (half a step in the interior, up to a full step at the clipped hi
+    edge)."""
+    x = jax.random.uniform(
+        jax.random.PRNGKey(seed), (256,), minval=-1.0, maxval=1.0
+    )
+    prev = None
+    for b in range(4, 9):
+        spec = ASPQuantSpec(grid_size=g, n_bits=b)
+        x_rt = dequantize_input(quantize_input(x, spec), spec)
+        err = float(jnp.max(jnp.abs(x_rt - x)))
+        assert err <= spec.code_step + 1e-6, (b, err, spec.code_step)
+        if prev is not None:
+            assert err <= prev + 1e-7, (b, err, prev)
+        prev = err
+
+
+# ----------------------------------------------------------------------------
+# int4 nibble codec + packed banded MAC vs unpacked reference, per layer
+# ----------------------------------------------------------------------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_nibble_codec_roundtrip_signed(seed):
+    k = jax.random.PRNGKey(seed)
+    lo = jax.random.randint(k, (37, 5), -8, 8, dtype=jnp.int32)
+    hi = jax.random.randint(
+        jax.random.fold_in(k, 1), (37, 5), -8, 8, dtype=jnp.int32
+    )
+    p = pl._pack_nibbles(lo, hi)
+    assert p.dtype == jnp.int8
+    p32 = p.astype(jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(pl._unpack_lo_nibble(p32)), np.asarray(lo)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pl._unpack_hi_nibble(p32)), np.asarray(hi)
+    )
+
+
+def _unpack_layer(lw, lp):
+    """Re-materialize a packed layer as the unpacked {"lut","wc","wb"} form
+    the kernel's f32 branch consumes (the decode IS the kernel's in-lane
+    arithmetic, so this is the unpacked reference deployment)."""
+    return {"lut": lw["lut"], "wc": pl.unpacked_wc(lw, lp), "wb": lw["wb"]}
+
+
+@pytest.mark.parametrize("bits", [(4, 4), (8, 4)], ids=str)
+def test_packed_banded_mac_bit_exact_vs_unpacked_per_layer(bits):
+    """Unpacking any single packed layer (and all of them) must be bitwise
+    invisible — output AND every boundary code."""
+    _, _, dep = kan1_bundle(n_bits=bits, batch=8)
+    x = jax.random.uniform(
+        jax.random.PRNGKey(5), (9, 17), minval=-1.0, maxval=1.0
+    )
+    want = kan_network_deploy_apply(
+        dep, x, interpret=True, backend="pallas", return_intermediates=True
+    )
+    packed = [i for i, lw in enumerate(dep.layers) if "wcp" in lw]
+    assert packed, "allocation deployed nothing packed"
+    subsets = [[i] for i in packed] + ([packed] if len(packed) > 1 else [])
+    for subset in subsets:
+        layers = list(dep.layers)
+        for i in subset:
+            layers[i] = _unpack_layer(layers[i], dep.plan.layers[i])
+        dep_u = dataclasses.replace(dep, layers=tuple(layers))
+        got = kan_network_deploy_apply(
+            dep_u, x, interpret=True, backend="pallas",
+            return_intermediates=True,
+        )
+        assert_bit_exact(want, got)
+
+
+def test_packed_deployment_shape_contract():
+    """<=4-bit layers deploy {"wcp","wscale"} (half the contraction rows per
+    int8 lane, no f32 "wc" at rest); 8-bit layers keep the unpacked form."""
+    _, _, dep = kan1_bundle(n_bits=(8, 4), batch=8)
+    l8, l4 = dep.layers
+    lp8, lp4 = dep.plan.layers
+    assert "wc" in l8 and "wcp" not in l8
+    assert "wcp" in l4 and "wc" not in l4
+    nb = lp4.spec.num_basis
+    assert l4["wcp"].shape == (lp4.fp * nb // 2, lp4.op)
+    assert l4["wcp"].dtype == jnp.int8
+    assert l4["wscale"].shape == (1, lp4.op)
+    assert tuple(pl.layer_weight_keys(lp4)) == tuple(sorted(
+        l4.keys(), key=tuple(pl.layer_weight_keys(lp4)).index
+    ))
+
+
+# ----------------------------------------------------------------------------
+# golden-parity sweep: every (backend, mesh, bits) cell vs the captured truth
+# ----------------------------------------------------------------------------
+
+
+def _bits_cells():
+    sel = os.environ.get("REPRO_TEST_BITS", "")
+    if sel == "int8":
+        return tuple(b for b in GOLDEN_BITS if b == 8)
+    if sel == "mixed48":
+        return tuple(b for b in GOLDEN_BITS if b != 8)
+    return GOLDEN_BITS
+
+
+def _mesh(kind):
+    from repro.launch.mesh import make_local_mesh
+
+    if kind == "none":
+        return None
+    if kind == "1x1":
+        return make_local_mesh(1, 1)
+    return make_local_mesh(2, 1)  # data-only
+
+
+@pytest.mark.parametrize("backend", GOLDEN_BACKENDS)
+@pytest.mark.parametrize("mesh_kind", ["none", "1x1", "data2"])
+@pytest.mark.parametrize("bits", _bits_cells(), ids=str)
+def test_golden_parity_cell(golden_parity, backend, mesh_kind, bits):
+    if mesh_kind == "data2" and _N_DEV < 2:
+        pytest.skip(
+            "needs >= 2 devices "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    ent = golden_parity[bits]
+    y, codes = kan_network_deploy_apply(
+        ent["dep"], ent["x"], interpret=True, backend=backend,
+        mesh=_mesh(mesh_kind), return_intermediates=True,
+    )
+    assert len(codes) == len(ent["codes"])
+    for got, want in zip(codes, ent["codes"]):
+        # the quantized datapath — boundary codes — is bitwise everywhere
+        np.testing.assert_array_equal(np.asarray(got), want)
+    if backend == "ref" and mesh_kind == "none":
+        # the unsharded ref runs the LOGICAL un-padded composition, whose
+        # f32 banded accumulation order differs from the kernel's padded
+        # tiling by <= 1 ulp (the repo-wide ref output contract, cf.
+        # test_runtime's allclose holds); meshed ref uses the padded
+        # per-layer form and is bitwise like the rest.
+        np.testing.assert_allclose(np.asarray(y), ent["y"],
+                                   atol=1e-7, rtol=1e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(y), ent["y"])

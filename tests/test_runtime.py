@@ -47,12 +47,11 @@ def _fresh_cache():
     runtime.reset_cache()
 
 
+from conftest import assert_bit_exact, kan1_bundle, run_pair
+
+
 def _kan1(batch=8, seed=0, grid=5):
-    kspec = KANSpec(dims=(17, 1, 14), grid_size=grid)
-    key = jax.random.PRNGKey(seed)
-    qparams = quantize_kan_network(init_kan_network(key, kspec), kspec)
-    dep = deploy_kan_network(qparams, kspec, batch=batch)
-    return kspec, qparams, dep
+    return kan1_bundle(batch=batch, seed=seed, grid=grid)
 
 
 # ----------------------------------------------------------------------------
@@ -293,24 +292,9 @@ def _mesh(data=1, model=1):
     return make_local_mesh(data, model)
 
 
-def _run_pair(dep, x, mesh, backend="pallas", **kw):
-    """(unsharded pallas, sharded ``backend``) outputs + boundary codes."""
-    y0, c0 = kan_network_deploy_apply(
-        dep, x, interpret=True, backend="pallas", return_intermediates=True
-    )
-    y1, c1 = kan_network_deploy_apply(
-        dep, x, interpret=True, backend=backend, mesh=mesh,
-        return_intermediates=True, **kw
-    )
-    return (y0, c0), (y1, c1)
-
-
-def _assert_bit_exact(a, b):
-    (y0, c0), (y1, c1) = a, b
-    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y0))
-    assert len(c0) == len(c1)
-    for x0, x1 in zip(c0, c1):
-        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x0))
+# shared with test_kvpool/test_spec_decode/test_mixed_precision via conftest
+_run_pair = run_pair
+_assert_bit_exact = assert_bit_exact
 
 
 def test_sharded_1x1_mesh_bit_exact_vs_unsharded():

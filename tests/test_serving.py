@@ -14,6 +14,9 @@ import pytest
 from repro.configs.registry import smoke_config
 from repro.models.model import decode_step, forward, init_params, prefill
 
+# top-3 slowest tier-1 suite: kept in CI, deselectable locally
+pytestmark = pytest.mark.slow
+
 ARCHS_TO_CHECK = [
     "llama3-405b", "qwen2.5-14b", "gemma2-27b", "mixtral-8x7b",
     "recurrentgemma-9b", "mamba2-370m", "whisper-base", "pixtral-12b",

@@ -25,30 +25,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import ensure_quiet_acim_backend
 from repro import runtime
-from repro.configs.registry import smoke_config
 from repro.models import model as M
-from repro.models.model import init_params
-from repro.runtime.executor import ACIMExecutor
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kvpool import KVBlockPool
 from repro.serve.scheduler import Scheduler
 from repro.serve.spec import DraftModel, DraftSpec
 
-# zero-noise acim executor: traces the same program as "pallas", so its
-# greedy streams take part in the bit-identity acceptance (test_scheduler
-# idiom)
-runtime.register_executor(
-    "acim-quiet", ACIMExecutor(cim=runtime.quiet_cim_config())
-)
+# the tier-1 run's slowest suite: kept in CI, deselectable locally
+pytestmark = pytest.mark.slow
+
+# zero-noise acim executor (conftest harness): traces the same program as
+# "pallas", so its greedy streams take part in the bit-identity acceptance;
+# the shared session-scoped ``kan_setup`` fixture also lives in conftest
+ensure_quiet_acim_backend()
 
 PAGED = dict(kv_block_size=8, kv_blocks=32, prefill_chunk=8)
-
-
-@pytest.fixture(scope="module")
-def kan_setup():
-    cfg = smoke_config("qwen2.5-14b").kan_variant()
-    return cfg, init_params(jax.random.PRNGKey(0), cfg)
 
 
 def make_reqs(cfg, n=3, max_new=6, seed=42):

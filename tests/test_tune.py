@@ -124,6 +124,66 @@ def test_constraint_violators_never_enter_the_front():
         assert p.metrics["energy_pj"] <= hc.max_energy_pj
 
 
+def test_sampling_rejects_powergap_invalid_bit_allocations():
+    """Seeded sampling REJECTS (never clamps) mixed allocations that are
+    PowerGap-invalid for the sampled grid: with G=32 on one axis value and
+    4-bit layers on another, no (32, ..4..) combination may ever be
+    proposed — by ``sample`` or by ``neighbors`` — while the valid
+    combinations still appear (the sampler must not starve)."""
+    from repro.core.asp_quant import max_ld
+
+    space = tune.DesignSpace(
+        grid_size=(5, 32), n_bits=(8, 16),
+        layer_bits=((), (8, 4), (4, 4)),
+        voltage_bits=(3, 4), array_rows=(128,), use_sam=(False,),
+    )
+    rng = np.random.default_rng(0)
+    cands = space.sample(rng, 200)
+    assert len(cands) == 200
+    seen = set()
+    for cand in cands:
+        assert space.is_valid(cand)
+        for b in (cand.n_bits,) + cand.layer_bits:
+            assert max_ld(cand.grid_size, b) >= 0, cand
+        seen.add((cand.grid_size, cand.layer_bits))
+        for nb in space.neighbors(cand, rng, n=2):
+            assert space.is_valid(nb), (cand, nb)
+    # the valid mixed cells are reachable, the invalid ones never are
+    assert (5, (4, 4)) in seen and (5, (8, 4)) in seen
+    assert not any(g == 32 and 4 in lb for g, lb in seen)
+
+
+def test_invalid_bit_allocations_never_reach_the_front():
+    """End-to-end regression: a seeded cost-only search over a space whose
+    axes CAN combine into PowerGap-invalid candidates evaluates only valid
+    ones — nothing invalid is scored, let alone fronted."""
+    from repro.core.asp_quant import max_ld
+
+    space = tune.DesignSpace(
+        grid_size=(5, 8, 32), n_bits=(8,),
+        layer_bits=((), (8, 4), (4, 4)),
+        voltage_bits=(3, 4), array_rows=(128,), use_sam=(False,),
+    )
+    res = tune.pareto_search(
+        None, space, config=tune.SearchConfig(budget=24, n_init=12, seed=3),
+    )
+    assert res.evaluated
+    for p in tuple(res.evaluated) + tuple(res.front):
+        cand = p.candidate
+        assert space.is_valid(cand), cand
+        for b in (cand.n_bits,) + cand.layer_bits:
+            assert max_ld(cand.grid_size, b) >= 0, cand
+
+
+def test_kan_cost_raises_on_invalid_layer_bits_never_clamps():
+    from repro.core.neurosim import kan_cost
+
+    cand = tune.Candidate(grid_size=32, layer_bits=(4, 8))
+    with pytest.raises(ValueError, match="PowerGap-invalid"):
+        kan_cost((17, 1, 14), 32, 3, 8, cand.input_gen(), 128, 8,
+                 layer_bits=cand.layer_bits)
+
+
 def test_cost_only_metrics_match_the_neurosim_cost_model():
     from repro.core.neurosim import kan_cost
 
